@@ -1,0 +1,96 @@
+"""Shared benchmark harness: a small ColBERT encoder, briefly trained
+contrastively on a synthetic mixture corpus so its token embeddings carry
+topical structure (a random encoder already retrieves via token identity;
+training sharpens it — mirroring the pretrained-ColBERTv2 role).
+
+Every paper-table benchmark uses the same trained encoder, cached across
+tables in one run.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ColbertConfig, TransformerConfig
+from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+from repro.models.colbert import colbert_loss, init_colbert
+from repro.train.optimizer import make_optimizer
+
+BENCH_TRUNK = TransformerConfig(
+    name="bench-trunk", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab_size=30522, causal=False, pos_emb="learned",
+    gated_mlp=False, act="gelu", norm="layernorm", remat=False,
+    max_seq_len=160, attn_full_threshold=4096)
+
+BENCH_CFG = ColbertConfig(
+    name="bench-colbert", trunk=BENCH_TRUNK, proj_dim=64, doc_maxlen=128,
+    query_maxlen=16, n_centroids=128, ndocs=2048)
+
+JA_TRUNK = TransformerConfig(
+    name="bench-ja-trunk", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab_size=32768, causal=False, pos_emb="learned",
+    gated_mlp=False, act="gelu", norm="layernorm", remat=False,
+    max_seq_len=192, attn_full_threshold=4096)
+
+BENCH_JA_CFG = ColbertConfig(
+    name="bench-jacolbert", trunk=JA_TRUNK, proj_dim=64, doc_maxlen=160,
+    query_maxlen=16, n_centroids=128, ndocs=2048)
+
+
+def train_encoder(cfg: ColbertConfig, steps: int = 40, batch: int = 16,
+                  seed: int = 0, lr: float = 3e-3, verbose: bool = False):
+    """Contrastive in-batch-negative training on a synthetic mixture."""
+    params = init_colbert(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer("adamw", lr)
+    state = opt.init(params)
+    mix = SyntheticRetrievalCorpus(DATASET_SPECS["scidocs"],
+                                   vocab_size=cfg.trunk.vocab_size)
+    qs, ds = mix.train_pairs(steps * batch, seed=seed)
+
+    @jax.jit
+    def step(params, state, q, d):
+        (loss, m), grads = jax.value_and_grad(colbert_loss, has_aux=True)(
+            params, q, d, cfg)
+        params, state = opt.update(params, grads, state)
+        return params, state, loss, m["acc"]
+
+    qlen, dlen = cfg.query_maxlen - 2, 64
+    for s in range(steps):
+        q = np.zeros((batch, qlen), np.int32)
+        d = np.zeros((batch, dlen), np.int32)
+        for b in range(batch):
+            qq = qs[s * batch + b][:qlen]
+            dd = mix.docs[ds[s * batch + b]][:dlen]
+            q[b, :len(qq)], d[b, :len(dd)] = qq, dd
+        params, state, loss, acc = step(params, state, jnp.asarray(q),
+                                        jnp.asarray(d))
+        if verbose and (s + 1) % 20 == 0:
+            print(f"  encoder step {s+1}: loss {float(loss):.3f} "
+                  f"acc {float(acc):.2f}")
+    return params
+
+
+_CACHE = {}
+
+
+def bench_encoder(ja: bool = False, verbose: bool = False):
+    key = "ja" if ja else "en"
+    if key not in _CACHE:
+        cfg = BENCH_JA_CFG if ja else BENCH_CFG
+        t0 = time.time()
+        params = train_encoder(cfg, verbose=verbose)
+        if verbose:
+            print(f"  trained {key} bench encoder in {time.time()-t0:.0f}s")
+        _CACHE[key] = (params, cfg)
+    return _CACHE[key]
+
+
+def small_spec(name: str, n_docs: int, n_queries: int):
+    """Scale a named dataset spec down for benchmark wall-time."""
+    from dataclasses import replace
+    spec = DATASET_SPECS[name]
+    return replace(spec, n_docs=n_docs, n_queries=n_queries)

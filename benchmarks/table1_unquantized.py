@@ -1,0 +1,53 @@
+"""Paper Table 1 (+Fig 1): token pooling on 16-bit vectors, HNSW index.
+
+Relative NDCG@10 (100 = unpooled) for hierarchical/kmeans/sequential
+pooling at factors 2/3/4/6, on the small BEIR-like datasets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_encoder, small_spec
+from repro.data.corpus import SyntheticRetrievalCorpus
+from repro.retrieval.evaluate import evaluate_pooling
+
+DATASETS = ["scifact", "scidocs", "nfcorpus", "fiqa"]
+METHODS = ("ward", "kmeans", "sequential")
+FACTORS = (2, 3, 4, 6)
+
+
+def run(verbose: bool = True):
+    params, cfg = bench_encoder(verbose=verbose)
+    rows = {}
+    for name in DATASETS:
+        corpus = SyntheticRetrievalCorpus(small_spec(name, 150, 20),
+                                          vocab_size=cfg.trunk.vocab_size)
+        rep = evaluate_pooling(
+            params, cfg, corpus, methods=METHODS, factors=FACTORS,
+            backend="hnsw", metric_name="ndcg@10",
+            hnsw_candidates=384)
+        rows[name] = rep
+        if verbose:
+            print(f"--- {name} (baseline ndcg@10 "
+                  f"{rep.baseline_metric:.4f}) ---")
+            print(rep.table())
+    # paper-style summary: relative performance matrix
+    print("\nTable 1 — relative NDCG@10 (100 = no pooling), "
+          "16-bit HNSW")
+    hdr = f"{'method':12s}{'f':>3s}" + "".join(
+        f"{d[:8]:>10s}" for d in DATASETS) + f"{'avg':>10s}"
+    print(hdr)
+    out = {}
+    for m in METHODS:
+        for f in FACTORS:
+            if m == "sequential" and f not in (2, 4):
+                continue
+            vals = [rows[d].cell(m, f).relative for d in DATASETS]
+            out[(m, f)] = np.mean(vals)
+            print(f"{m:12s}{f:3d}" + "".join(
+                f"{v:10.2f}" for v in vals) + f"{np.mean(vals):10.2f}")
+    return {"rows": {d: rows[d] for d in DATASETS}, "avg": out}
+
+
+if __name__ == "__main__":
+    run()

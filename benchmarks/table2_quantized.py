@@ -1,0 +1,51 @@
+"""Paper Table 2 (+Fig 2): token pooling composed with 2-bit residual
+quantization + PLAID staged search; BEIR-like + LoTTe-like datasets."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_encoder, small_spec
+from repro.data.corpus import SyntheticRetrievalCorpus
+from repro.retrieval.evaluate import evaluate_pooling
+
+BEIR = ["scifact", "scidocs", "nfcorpus", "fiqa", "trec-covid", "touche"]
+LOTTE = ["lotte-writing", "lotte-recreation", "lotte-lifestyle"]
+METHODS = ("ward", "kmeans", "sequential")
+FACTORS = (2, 3, 4, 6)
+
+
+def run(verbose: bool = True):
+    params, cfg = bench_encoder(verbose=verbose)
+    rows = {}
+    for name in BEIR + LOTTE:
+        metric = "ndcg@10" if name in BEIR else "success@5"
+        corpus = SyntheticRetrievalCorpus(small_spec(name, 160, 20),
+                                          vocab_size=cfg.trunk.vocab_size)
+        rep = evaluate_pooling(
+            params, cfg, corpus, methods=METHODS, factors=FACTORS,
+            backend="plaid", metric_name=metric)
+        rows[name] = rep
+        if verbose:
+            print(f"--- {name} [{metric}] baseline "
+                  f"{rep.baseline_metric:.4f} ---")
+
+    print("\nTable 2 — relative performance (100 = no pooling), "
+          "2-bit PLAID")
+    names = BEIR + LOTTE
+    hdr = f"{'method':12s}{'f':>3s}" + "".join(
+        f"{d[:9]:>11s}" for d in names) + f"{'avg':>8s}"
+    print(hdr)
+    out = {}
+    for m in METHODS:
+        for f in FACTORS:
+            if m == "sequential" and f not in (2, 4):
+                continue
+            vals = [rows[d].cell(m, f).relative for d in names]
+            out[(m, f)] = np.mean(vals)
+            print(f"{m:12s}{f:3d}" + "".join(
+                f"{v:11.2f}" for v in vals) + f"{np.mean(vals):8.2f}")
+    return {"rows": rows, "avg": out}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Table 3: vector count & index size vs pooling factor.
+
+Dense single-vector (16-bit HNSW) vs PLAID-indexed ColBERT at pooling
+factors 1/2/3/4/6, on the trec-covid analogue at the encoder's doc_maxlen
+(paper: 256-token truncation; our bench encoder: 128)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_encoder, small_spec
+from repro.data.corpus import SyntheticRetrievalCorpus
+from repro.retrieval.indexer import Indexer
+
+
+def run(verbose: bool = True):
+    params, cfg = bench_encoder(verbose=verbose)
+    corpus = SyntheticRetrievalCorpus(small_spec("trec-covid", 300, 16),
+                                      vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+
+    print("\nTable 3 — vector count & index size")
+    # dense single-vector baseline: one 16-bit vector per doc in HNSW
+    n_docs = toks.shape[0]
+    dense_bytes = n_docs * cfg.proj_dim * 2
+    print(f"{'16-bit dense single-vector':32s} {n_docs:>9d} vecs "
+          f"{dense_bytes/2**20:8.2f} MiB")
+
+    out = {"dense": dense_bytes}
+    for factor in (1, 2, 3, 4, 6):
+        idx, stats = Indexer(params, cfg, pool_method="ward",
+                             pool_factor=factor, backend="plaid").build(toks)
+        label = ("2-bit PLAID (no pooling)" if factor == 1
+                 else f"2-bit PLAID pool {factor}")
+        print(f"{label:32s} {stats.n_vectors_stored:>9d} vecs "
+              f"{stats.index_bytes/2**20:8.2f} MiB "
+              f"({stats.vector_reduction:5.1%} fewer vectors)")
+        out[factor] = (stats.n_vectors_stored, stats.index_bytes)
+    return out
+
+
+if __name__ == "__main__":
+    run()

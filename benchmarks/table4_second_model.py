@@ -1,0 +1,42 @@
+"""Paper Table 4: second model / second language (JaColBERTv2 analogue).
+
+Hierarchical pooling on the Japanese-analogue corpora (longer docs,
+doc_maxlen=160 vs 128, different vocab), 2-bit PLAID, Recall@5."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_encoder, small_spec
+from repro.data.corpus import SyntheticRetrievalCorpus
+from repro.retrieval.evaluate import evaluate_pooling
+
+DATASETS = ["jsquad", "miracl-ja"]
+FACTORS = (2, 3, 4, 6)
+
+
+def run(verbose: bool = True):
+    params, cfg = bench_encoder(ja=True, verbose=verbose)
+    rows = {}
+    for name in DATASETS:
+        corpus = SyntheticRetrievalCorpus(small_spec(name, 160, 20),
+                                          vocab_size=cfg.trunk.vocab_size)
+        rep = evaluate_pooling(params, cfg, corpus, methods=("ward",),
+                               factors=FACTORS, backend="plaid",
+                               metric_name="recall@5")
+        rows[name] = rep
+
+    print("\nTable 4 — hierarchical pooling, second model (JA analogue), "
+          "relative Recall@5, 2-bit PLAID")
+    print(f"{'f':>3s}" + "".join(f"{d:>12s}" for d in DATASETS)
+          + f"{'avg':>10s}")
+    out = {}
+    for f in FACTORS:
+        vals = [rows[d].cell("ward", f).relative for d in DATASETS]
+        out[f] = np.mean(vals)
+        print(f"{f:3d}" + "".join(f"{v:12.2f}" for v in vals)
+              + f"{np.mean(vals):10.2f}")
+    return {"rows": rows, "avg": out}
+
+
+if __name__ == "__main__":
+    run()

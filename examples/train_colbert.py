@@ -1,0 +1,99 @@
+"""End-to-end driver: contrastively train a ColBERT encoder, checkpoint,
+then index with token pooling and evaluate relative performance.
+
+Default (CPU-friendly):
+    PYTHONPATH=src python examples/train_colbert.py --steps 80
+
+~100M-parameter configuration (the paper-scale trunk; slow on CPU):
+    PYTHONPATH=src python examples/train_colbert.py \
+        --full --steps 300 --batch 8
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+from repro.models.colbert import colbert_loss, init_colbert
+from repro.retrieval.evaluate import evaluate_pooling
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import cosine_schedule, make_optimizer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full ColBERTv2 trunk (110M params)")
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="/tmp/colbert_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config("colbertv2") if args.full \
+        else get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"ColBERT encoder: {n_params/1e6:.1f}M params "
+          f"(doc_maxlen={cfg.doc_maxlen})")
+
+    opt = make_optimizer("adamw",
+                         cosine_schedule(args.lr, 10, args.steps))
+    state = opt.init(params)
+    ckpt = CheckpointManager(args.checkpoint_dir)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        start, tree, _ = ckpt.restore()
+        params = jax.tree_util.tree_map(jnp.asarray, tree["params"])
+        state = jax.tree_util.tree_map(jnp.asarray, tree["opt_state"])
+        print(f"resumed from step {start}")
+
+    corpus = SyntheticRetrievalCorpus(DATASET_SPECS["scidocs"],
+                                      vocab_size=cfg.trunk.vocab_size)
+    qs, ds = corpus.train_pairs(args.steps * args.batch, seed=1)
+
+    @jax.jit
+    def step(params, state, q, d):
+        (loss, m), grads = jax.value_and_grad(colbert_loss, has_aux=True)(
+            params, q, d, cfg)
+        params, state = opt.update(params, grads, state)
+        return params, state, loss, m["acc"]
+
+    qlen, dlen = cfg.query_maxlen - 2, min(cfg.doc_maxlen - 2, 64)
+    t0 = time.time()
+    for s in range(start, args.steps):
+        q = np.zeros((args.batch, qlen), np.int32)
+        d = np.zeros((args.batch, dlen), np.int32)
+        for b in range(args.batch):
+            qq = qs[s * args.batch + b][:qlen]
+            dd = corpus.docs[ds[s * args.batch + b]][:dlen]
+            q[b, :len(qq)], d[b, :len(dd)] = qq, dd
+        params, state, loss, acc = step(params, state, jnp.asarray(q),
+                                        jnp.asarray(d))
+        if (s + 1) % 20 == 0:
+            print(f"step {s+1:4d}: loss {float(loss):.4f} "
+                  f"in-batch acc {float(acc):.2f} "
+                  f"({(time.time()-t0)/(s+1-start):.2f}s/step)")
+        if (s + 1) % 50 == 0:
+            ckpt.save(s + 1, {"params": params, "opt_state": state})
+    ckpt.save(args.steps, {"params": params, "opt_state": state})
+    ckpt.wait()
+
+    print("\nevaluating token pooling with the trained encoder...")
+    eval_corpus = SyntheticRetrievalCorpus(
+        DATASET_SPECS["scifact"], vocab_size=cfg.trunk.vocab_size)
+    report = evaluate_pooling(params, cfg, eval_corpus, methods=("ward",),
+                              factors=(2, 3, 4), backend="plaid",
+                              metric_name="ndcg@10")
+    print(report.table())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Qwen3-0.6B dense, qk_norm, GQA [hf:Qwen/Qwen3 family; hf].
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+"""
+from repro.configs.base import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="qwen3-0.6b",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    attn_shard="heads",           # 16 % 16 == 0
+    optimizer="adamw",
+)
+
+SMOKE = TransformerConfig(
+    name="qwen3-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab_size=512,
+    qk_norm=True,
+    remat=False,
+    attn_full_threshold=4096,
+    max_seq_len=128,
+)

@@ -1,0 +1,11 @@
+"""The paper's contribution: token pooling + the index stack it plugs into."""
+from repro.core.pooling import (METHODS, compact_pooled, pool_doc_embeddings,
+                                vector_counts)
+from repro.core.maxsim import maxsim_scores, maxsim_scores_blocked, topk_docs
+from repro.core.index import MultiVectorIndex
+
+__all__ = [
+    "METHODS", "compact_pooled", "pool_doc_embeddings", "vector_counts",
+    "maxsim_scores", "maxsim_scores_blocked", "topk_docs",
+    "MultiVectorIndex",
+]

@@ -1,0 +1,178 @@
+"""Index facade: Flat | HNSW | PLAID behind one add/delete/search interface.
+
+The paper's two experimental settings map to:
+  * ``hnsw``  — 16-bit unpooled/pooled vectors in a token-level HNSW graph
+                (paper uses VOYAGER); stage 2 exact rerank over stored vectors.
+  * ``plaid`` — 2-bit residual-quantized vectors behind IVF probing.
+  * ``flat``  — exact MaxSim over everything (the oracle; small corpora only).
+
+All three store *token* vectors grouped by document and return document ids,
+so the evaluation harness is backend-agnostic. Pooling happens upstream
+(retrieval/indexer.py) — the index only ever sees the (possibly pooled)
+per-document vector lists. CRUD: ``add`` appends docs, ``delete`` removes
+them (HNSW deletes lazily, PLAID/Flat compact).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hnsw import HNSW
+from repro.core.ivf import train_centroids
+from repro.core.maxsim import maxsim_scores
+from repro.core.plaid import PLAIDIndex, build_plaid_index, plaid_search
+from repro.core.quantization import train_codec
+
+BACKENDS = ("flat", "hnsw", "plaid")
+
+
+def _pad_docs(doc_vectors: List[np.ndarray], maxlen: int, dim: int):
+    n = len(doc_vectors)
+    out = np.zeros((n, maxlen, dim), np.float32)
+    mask = np.zeros((n, maxlen), bool)
+    for i, v in enumerate(doc_vectors):
+        k = min(len(v), maxlen)
+        out[i, :k] = v[:k]
+        mask[i, :k] = True
+    return out, mask
+
+
+@dataclass
+class MultiVectorIndex:
+    """Late-interaction index over per-document token-vector lists."""
+    dim: int
+    backend: str = "plaid"
+    doc_maxlen: int = 256
+    # PLAID params
+    n_centroids: int = 256
+    quant_bits: int = 2
+    nprobe: int = 8
+    t_cs: float = 0.3
+    ndocs: int = 8192
+    # HNSW params (paper Appendix A)
+    hnsw_m: int = 12
+    hnsw_ef_construction: int = 200
+    hnsw_candidates: int = 1024    # token hits gathered before doc rerank
+
+    # state
+    docs: List[np.ndarray] = field(default_factory=list)
+    deleted: set = field(default_factory=set)
+    _hnsw: Optional[HNSW] = None
+    _hnsw_vec2doc: Optional[np.ndarray] = None
+    _plaid: Optional[PLAIDIndex] = None
+
+    def __post_init__(self):
+        assert self.backend in BACKENDS, self.backend
+
+    # ------------------------------------------------------------------ build
+    def add(self, doc_vectors: List[np.ndarray]) -> np.ndarray:
+        """doc_vectors: list of [n_i, dim] unit vectors. Returns doc ids."""
+        doc_vectors = [np.asarray(v, np.float32) for v in doc_vectors]
+        ids = np.arange(len(self.docs), len(self.docs) + len(doc_vectors))
+        self.docs.extend(doc_vectors)
+        if self.backend == "hnsw":
+            self._add_hnsw(doc_vectors, ids)
+        elif self.backend == "plaid":
+            self._add_plaid(doc_vectors)
+        return ids
+
+    def _add_hnsw(self, doc_vectors, ids):
+        if self._hnsw is None:
+            self._hnsw = HNSW(self.dim, m=self.hnsw_m,
+                              ef_construction=self.hnsw_ef_construction)
+            self._hnsw_vec2doc = np.zeros((0,), np.int64)
+        flat = np.concatenate(doc_vectors) if doc_vectors else \
+            np.zeros((0, self.dim), np.float32)
+        self._hnsw.add(flat)
+        lens = np.array([len(v) for v in doc_vectors], np.int64)
+        self._hnsw_vec2doc = np.concatenate(
+            [self._hnsw_vec2doc, np.repeat(ids, lens)])
+
+    def _add_plaid(self, doc_vectors):
+        if self._plaid is None:
+            flat = np.concatenate(doc_vectors)
+            k = min(self.n_centroids, len(flat))
+            centroids = train_centroids(flat, k)
+            codec = train_codec(jnp.asarray(flat), centroids,
+                                bits=self.quant_bits)
+            self._plaid = build_plaid_index(doc_vectors, codec,
+                                            self.doc_maxlen)
+        else:
+            self._plaid.add(doc_vectors)
+
+    def delete(self, doc_ids) -> None:
+        self.deleted.update(int(i) for i in doc_ids)
+        if self.backend == "hnsw" and self._hnsw is not None:
+            tok = np.nonzero(np.isin(self._hnsw_vec2doc,
+                                     np.asarray(doc_ids)))[0]
+            self._hnsw.delete(tok)
+        # plaid/flat filter deleted ids at query time (compaction via rebuild)
+
+    # ----------------------------------------------------------------- search
+    def search(self, q: np.ndarray, k: int = 10
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """q: [Lq, dim] query token vectors -> (scores [k'], doc ids [k'])."""
+        if self.backend == "flat":
+            s, i = self._search_flat(q, k + len(self.deleted))
+        elif self.backend == "hnsw":
+            s, i = self._search_hnsw(q, k + len(self.deleted))
+        else:
+            s, i = plaid_search(self._plaid, q, k=k + len(self.deleted),
+                                nprobe=self.nprobe, t_cs=self.t_cs,
+                                ndocs=self.ndocs)
+        if self.deleted:
+            keep = ~np.isin(i, np.fromiter(self.deleted, np.int64))
+            s, i = s[keep], i[keep]
+        return s[:k], i[:k]
+
+    def search_batch(self, qs: np.ndarray, k: int = 10):
+        """qs: [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -1 pads)."""
+        S = np.full((len(qs), k), -np.inf, np.float32)
+        I = np.full((len(qs), k), -1, np.int64)
+        for n, q in enumerate(np.asarray(qs)):
+            s, i = self.search(q, k)
+            S[n, :len(s)], I[n, :len(i)] = s, i
+        return S, I
+
+    def _search_flat(self, q, k):
+        d, dm = _pad_docs(self.docs, self.doc_maxlen, self.dim)
+        qm = np.ones((1, len(q)), bool)
+        s = np.asarray(maxsim_scores(jnp.asarray(q[None], jnp.float32),
+                                     jnp.asarray(qm), jnp.asarray(d),
+                                     jnp.asarray(dm)))[0]
+        order = np.argsort(-s)[:k]
+        return s[order], order.astype(np.int64)
+
+    def _search_hnsw(self, q, k):
+        """Two-stage: per-query-token ANN probe -> exact doc rerank."""
+        per_tok = max(self.hnsw_candidates // max(len(q), 1), 8)
+        cand = set()
+        for qt in np.asarray(q, np.float32):
+            _, ids = self._hnsw.search(qt, per_tok)
+            cand.update(int(self._hnsw_vec2doc[i]) for i in ids)
+        if not cand:
+            return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
+        cand = np.fromiter(cand, np.int64)
+        docs = [self.docs[i] for i in cand]
+        d, dm = _pad_docs(docs, self.doc_maxlen, self.dim)
+        qm = np.ones((1, len(q)), bool)
+        s = np.asarray(maxsim_scores(jnp.asarray(q[None], jnp.float32),
+                                     jnp.asarray(qm), jnp.asarray(d),
+                                     jnp.asarray(dm)))[0]
+        order = np.argsort(-s)[:k]
+        return s[order], cand[order]
+
+    # ------------------------------------------------------------------ stats
+    def n_vectors(self) -> int:
+        return int(sum(len(v) for i, v in enumerate(self.docs)
+                       if i not in self.deleted))
+
+    def nbytes(self) -> int:
+        if self.backend == "hnsw" and self._hnsw is not None:
+            return self._hnsw.nbytes()
+        if self.backend == "plaid" and self._plaid is not None:
+            return self._plaid.nbytes()
+        return int(sum(v.nbytes // 2 for v in self.docs))   # fp16 flat

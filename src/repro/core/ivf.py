@@ -1,0 +1,66 @@
+"""IVF coarse quantizer: centroid training + inverted lists (CSR layout).
+
+The same k-means substrate the paper's pooling uses, applied at corpus scale:
+token vectors are assigned to K coarse centroids; the inverted lists map each
+centroid to the vector ids it owns. This is the candidate-generation stage of
+the PLAID pipeline (centroid probe -> inverted-list gather).
+
+Centroid training is data-parallel friendly: ``kmeans_train``'s E/M steps are
+segment-sums, so under pjit with the vector axis sharded on ``data`` the
+statistics all-reduce automatically. List construction is a host-side sort
+(it is an index-build artifact, not a hot path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans_train
+
+
+@dataclass
+class InvertedLists:
+    """CSR inverted file: vectors of centroid c are ids[offsets[c]:offsets[c+1]]."""
+    offsets: np.ndarray          # [K + 1] int64
+    ids: np.ndarray              # [n_vectors] int64 (vector ids, centroid-major)
+
+    @property
+    def n_centroids(self) -> int:
+        return len(self.offsets) - 1
+
+    def list_for(self, c: int) -> np.ndarray:
+        return self.ids[self.offsets[c]:self.offsets[c + 1]]
+
+    def lists_for(self, cs) -> np.ndarray:
+        """Concatenated ids for several centroids (deduplicated)."""
+        parts = [self.list_for(int(c)) for c in np.unique(np.asarray(cs))]
+        if not parts:
+            return np.zeros((0,), np.int64)
+        return np.unique(np.concatenate(parts))
+
+
+def train_centroids(vectors, n_centroids: int, n_iters: int = 12,
+                    seed: int = 0) -> jnp.ndarray:
+    """vectors [M, dim] -> unit centroids [K, dim] (cosine k-means)."""
+    import jax
+    return kmeans_train(jnp.asarray(vectors, jnp.float32), k=n_centroids,
+                        n_iters=n_iters, key=jax.random.PRNGKey(seed))
+
+
+def assign_vectors(vectors, centroids) -> np.ndarray:
+    """Nearest (max cosine) centroid per vector -> [M] int32."""
+    v = jnp.asarray(vectors, jnp.float32)
+    v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+    return np.asarray(jnp.argmax(v @ jnp.asarray(centroids).T, axis=-1),
+                      np.int32)
+
+
+def build_inverted_lists(assign: np.ndarray, n_centroids: int) -> InvertedLists:
+    assign = np.asarray(assign)
+    order = np.argsort(assign, kind="stable").astype(np.int64)
+    counts = np.bincount(assign, minlength=n_centroids)
+    offsets = np.zeros(n_centroids + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return InvertedLists(offsets=offsets, ids=order)

@@ -1,0 +1,100 @@
+"""Batched Lloyd k-means on cosine similarity (paper pooling method #2,
+also the IVF centroid trainer for the PLAID-style index).
+
+TPU adaptation: one [B, N, K] masked similarity argmax per Lloyd step
+(MXU matmul), segment-mean centroid update, fixed iteration count, padded
+clusters masked — per-document K varies (floor(n/f)+1) but shapes don't.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _normalize(x, eps=1e-9):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def _init_centroids(x, mask, k_max):
+    """Deterministic strided init: pick ~evenly spaced valid tokens."""
+    N = x.shape[0]
+    n_valid = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+    # positions of valid tokens, padded with 0
+    idx_sorted = jnp.argsort(jnp.where(mask, 0, 1), stable=True)  # valid first
+    stride_pos = (jnp.arange(k_max) * n_valid) // k_max           # [k_max]
+    take = idx_sorted[jnp.clip(stride_pos, 0, N - 1)]
+    return x[take]                                                # [k_max, d]
+
+
+def kmeans_assign_step(x, centroids, mask, k_mask):
+    """One assignment: x [N,d], centroids [K,d] (unit), -> assign [N]."""
+    sim = x @ centroids.T                                  # [N, K]
+    sim = jnp.where(k_mask[None, :], sim, -jnp.inf)
+    assign = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+    return jnp.where(mask, assign, 0)
+
+
+def _update_centroids(x, assign, mask, centroids, k_mask):
+    K = centroids.shape[0]
+    w = mask.astype(x.dtype)
+    sums = jax.ops.segment_sum(x * w[:, None], assign, num_segments=K)
+    cnts = jax.ops.segment_sum(w, assign, num_segments=K)
+    new = sums / jnp.maximum(cnts[:, None], 1e-9)
+    new = _normalize(new)
+    # empty clusters keep the old centroid
+    keep = (cnts > 0)[:, None] & k_mask[:, None]
+    return jnp.where(keep, new, centroids)
+
+
+def kmeans_cluster(x, mask, k_target, k_max: int, n_iters: int = 10):
+    """Cluster one document. Returns assign [N] into [0, k_max)."""
+    x = _normalize(x.astype(jnp.float32))
+    x = jnp.where(mask[:, None], x, 0.0)
+    k_mask = jnp.arange(k_max) < jnp.maximum(k_target, 1)
+    centroids = _normalize(_init_centroids(x, mask, k_max))
+
+    def body(_, c):
+        a = kmeans_assign_step(x, c, mask, k_mask)
+        return _update_centroids(x, a, mask, c, k_mask)
+
+    centroids = jax.lax.fori_loop(0, n_iters, body, centroids)
+    return kmeans_assign_step(x, centroids, mask, k_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("factor", "n_iters"))
+def kmeans_cluster_batch(x, mask, factor: int, n_iters: int = 10):
+    """x: [B, N, d]; mask: [B, N] -> assign [B, N] (cluster ids < N//factor+1)."""
+    N = x.shape[1]
+    k_max = N // factor + 1
+    n_valid = jnp.sum(mask.astype(jnp.int32), axis=-1)
+    k = n_valid // factor + 1
+    return jax.vmap(lambda xi, mi, ki: kmeans_cluster(
+        xi, mi, ki, k_max=k_max, n_iters=n_iters))(x, mask, k)
+
+
+# ---------------------------------------------------------------------------
+# Flat (non-per-doc) k-means — IVF centroid training over all token vectors.
+# Data-parallel friendly: the E-step/M-step stats are plain segment-sums, so
+# under pjit with x sharded on the data axis XLA all-reduces the stats.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "n_iters"))
+def kmeans_train(x, k: int, n_iters: int = 12, key=None):
+    """x: [M, d] -> centroids [k, d] (unit-normalized)."""
+    x = _normalize(x.astype(jnp.float32))
+    M = x.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    perm = jax.random.permutation(key, M)[:k]
+    c = x[perm]
+
+    def body(_, c):
+        sim = x @ c.T                                   # [M, k]
+        a = jnp.argmax(sim, axis=-1)
+        sums = jax.ops.segment_sum(x, a, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones((M,), x.dtype), a, num_segments=k)
+        new = _normalize(sums / jnp.maximum(cnts[:, None], 1e-9))
+        return jnp.where((cnts > 0)[:, None], new, c)
+
+    return jax.lax.fori_loop(0, n_iters, body, c)

@@ -1,0 +1,69 @@
+"""MaxSim late-interaction scoring (ColBERT):  S(q, D) = sum_i max_j q_i . d_j.
+
+The query-time hot path the whole index feeds. jnp reference here; the
+Pallas kernel (kernels/maxsim) implements the same contraction with doc-token
+blocks streamed through VMEM and a running max (dispatched via
+``kernels.maxsim.ops.maxsim`` when on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.api import constrain
+
+
+def maxsim(q, q_mask, d, d_mask):
+    """q: [Lq, dim]; d: [Ld, dim] -> scalar score."""
+    sim = q @ d.T                                      # [Lq, Ld]
+    sim = jnp.where(d_mask[None, :], sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)
+    best = jnp.where(q_mask & jnp.isfinite(best), best, 0.0)
+    return jnp.sum(best)
+
+
+@jax.jit
+def maxsim_scores(q, q_mask, d, d_mask):
+    """Score every query against every doc.
+
+    q: [Nq, Lq, dim]; q_mask: [Nq, Lq]; d: [Nd, Ld, dim]; d_mask: [Nd, Ld]
+    -> scores [Nq, Nd] float32.
+    """
+    q = constrain(q.astype(jnp.float32), "queries", None, None)
+    d = constrain(d.astype(jnp.float32), "docs", None, None)
+    sim = jnp.einsum("qld,nkd->qnlk", q, d)            # [Nq, Nd, Lq, Ld]
+    sim = jnp.where(d_mask[None, :, None, :], sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)                       # [Nq, Nd, Lq]
+    best = jnp.where(q_mask[:, None, :] & jnp.isfinite(best), best, 0.0)
+    return jnp.sum(best, axis=-1)                      # [Nq, Nd]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "unroll"))
+def maxsim_scores_blocked(q, q_mask, d, d_mask, block: int = 256,
+                          unroll: bool = False):
+    """Memory-bounded variant: docs processed in blocks via lax.scan.
+
+    Needed when Nd * Lq * Ld would blow HBM; the Pallas kernel is the fused
+    version of exactly this loop. ``unroll`` is the roofline-analysis mode
+    (cost_analysis counts loop bodies once).
+    """
+    Nd = d.shape[0]
+    assert Nd % block == 0, (Nd, block)
+    nb = Nd // block
+    db = d.reshape(nb, block, *d.shape[1:])
+    mb = d_mask.reshape(nb, block, d_mask.shape[-1])
+
+    def one(carry, args):
+        dd, mm = args
+        return carry, maxsim_scores(q, q_mask, dd, mm)   # [Nq, block]
+
+    _, out = jax.lax.scan(one, 0, (db, mb),
+                          unroll=nb if unroll else 1)    # [nb, Nq, block]
+    return jnp.swapaxes(out, 0, 1).reshape(q.shape[0], Nd)
+
+
+def topk_docs(scores, k):
+    """scores [Nq, Nd] -> (top scores [Nq,k], doc ids [Nq,k])."""
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,121 @@
+"""TOKEN POOLING — the paper's contribution (§2), as a drop-in indexing step.
+
+Given per-document token embeddings, group them with one of three clustering
+methods and replace each group by its (re-normalized) mean:
+
+  * ``sequential`` — pool runs of ``factor`` consecutive tokens (paper baseline)
+  * ``kmeans``     — cosine k-means, K = floor(n/factor) + 1
+  * ``ward``       — hierarchical Ward clustering (paper's best method)
+
+No training, no query-time change: this runs between the encoder and the
+index. ``pool_factor=1`` or method ``none`` is the identity (the unpooled
+baseline every paper table is normalized against).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_cluster_batch
+from repro.core.ward import ward_cluster_batch
+
+METHODS = ("none", "sequential", "kmeans", "ward")
+
+
+def sequential_assign(mask, factor: int):
+    """assign[t] = t // factor over valid tokens. mask: [B, N]."""
+    B, N = mask.shape
+    a = (jnp.arange(N) // factor).astype(jnp.int32)
+    return jnp.broadcast_to(a, (B, N))
+
+
+def _mean_pool_by_assign(x, mask, assign, num_segments: int,
+                         renormalize: bool = True):
+    """Segment-mean x by assign per document.
+
+    x: [B, N, d]; mask: [B, N]; assign: [B, N] ids in [0, num_segments).
+    Returns pooled [B, num_segments, d], pooled_mask [B, num_segments].
+    """
+    w = mask.astype(jnp.float32)
+
+    def one(xi, wi, ai):
+        sums = jax.ops.segment_sum(xi * wi[:, None], ai,
+                                   num_segments=num_segments)
+        cnts = jax.ops.segment_sum(wi, ai, num_segments=num_segments)
+        mean = sums / jnp.maximum(cnts[:, None], 1e-9)
+        if renormalize:
+            nrm = jnp.linalg.norm(mean, axis=-1, keepdims=True)
+            mean = mean / jnp.maximum(nrm, 1e-9)
+        return mean * (cnts > 0)[:, None], cnts > 0
+
+    return jax.vmap(one)(x.astype(jnp.float32), w, assign)
+
+
+@functools.partial(jax.jit, static_argnames=("factor", "method",
+                                             "renormalize"))
+def pool_doc_embeddings(x, mask, factor: int, method: str = "ward",
+                        renormalize: bool = True
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pool token vectors (the paper's indexing-time compression step).
+
+    Args:
+      x: [B, N, d] token embeddings.
+      mask: [B, N] bool — True for real tokens.
+      factor: the POOLING FACTOR (2 -> 50% fewer vectors, 3 -> 66%, ...).
+      method: none | sequential | kmeans | ward.
+
+    Returns:
+      pooled: [B, N, d] — pooled vectors scattered into slots (zero rows
+              where no cluster lives); compact host-side for storage.
+      pooled_mask: [B, N] bool — which slots hold a pooled vector.
+    """
+    assert method in METHODS, method
+    B, N, d = x.shape
+    if method == "none" or factor <= 1:
+        xo = x.astype(jnp.float32)
+        if renormalize:
+            xo = xo / jnp.maximum(
+                jnp.linalg.norm(xo, axis=-1, keepdims=True), 1e-9)
+        return jnp.where(mask[..., None], xo, 0.0), mask
+
+    if method == "sequential":
+        assign = sequential_assign(mask, factor)
+        nseg = (N + factor - 1) // factor
+        pooled, pmask = _mean_pool_by_assign(x, mask, assign, nseg,
+                                             renormalize)
+        pad = N - nseg
+        pooled = jnp.pad(pooled, ((0, 0), (0, pad), (0, 0)))
+        pmask = jnp.pad(pmask, ((0, 0), (0, pad)))
+        return pooled, pmask
+
+    if method == "kmeans":
+        assign = kmeans_cluster_batch(x, mask, factor)
+        k_max = N // factor + 1
+        pooled, pmask = _mean_pool_by_assign(x, mask, assign, k_max,
+                                             renormalize)
+        pad = N - k_max
+        pooled = jnp.pad(pooled, ((0, 0), (0, pad), (0, 0)))
+        pmask = jnp.pad(pmask, ((0, 0), (0, pad)))
+        return pooled, pmask
+
+    # ward: assign ids live in [0, N) (representative token index)
+    assign = ward_cluster_batch(x, mask, factor)
+    pooled, pmask = _mean_pool_by_assign(x, mask, assign, N, renormalize)
+    return pooled, pmask
+
+
+def compact_pooled(pooled, pooled_mask):
+    """Host-side: drop empty slots -> list of [n_i, d] numpy arrays."""
+    import numpy as np
+    pooled = np.asarray(pooled)
+    pooled_mask = np.asarray(pooled_mask)
+    return [pooled[b][pooled_mask[b]] for b in range(pooled.shape[0])]
+
+
+def vector_counts(mask, pooled_mask):
+    """(original vector count, pooled vector count) per batch — Table 3."""
+    return (int(jnp.sum(mask.astype(jnp.int32))),
+            int(jnp.sum(pooled_mask.astype(jnp.int32))))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots of the retrieval stack.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec tiling), ops.py
+(jit'd public wrapper, interpret=True off-TPU) and ref.py (pure-jnp
+oracle the tests sweep shapes/dtypes against).
+"""
+from repro.kernels.maxsim.ops import maxsim
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.quant.ops import dequant_score
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["maxsim", "kmeans_assign", "dequant_score", "flash_attention"]

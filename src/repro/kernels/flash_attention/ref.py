@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool):
+    """q: [B, H, Sq, dh]; k, v: [B, KV, Skv, dh] with H % KV == 0.
+
+    Returns o [B, H, Sq, dh] in q.dtype (f32 softmax internally).
+    """
+    B, H, Sq, dh = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if causal:
+        Skv = k.shape[2]
+        mask = (jnp.arange(Sq)[:, None] + (Skv - Sq)
+                >= jnp.arange(Skv)[None, :])
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vf.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Fused similarity + argmax k-means assignment (Pallas TPU).
+
+The pooling/IVF hot loop: X·Cᵀ then a masked argmax per row, fused so the
+[N, K] similarity matrix never round-trips HBM. Centroids stay resident in
+VMEM across the whole grid (their BlockSpec index is constant); x streams
+through in ``block_n`` row tiles.
+
+Argmax is computed in-kernel with the iota-min trick (smallest index among
+maxima, matching jnp.argmax semantics exactly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(x_ref, c_ref, km_ref, a_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)               # [BN, dim]
+    c = c_ref[...].astype(jnp.float32)               # [K, dim]
+    sim = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    km = km_ref[...].reshape(1, -1)                  # [1, K]
+    sim = jnp.where(km, sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)                     # [BN]
+    K = sim.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, sim.shape, 1)
+    idx = jnp.min(jnp.where(sim == best[:, None], iota, K), axis=-1)
+    a_ref[...] = idx.astype(jnp.int32)
+    s_ref[...] = best
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_pallas(x, centroids, k_mask, *, block_n: int = 256,
+                         interpret: bool = False):
+    """x: [N, dim]; centroids: [K, dim]; k_mask: [K] bool.
+
+    Returns (assign [N] int32, best_sim [N] f32). N % block_n == 0.
+    """
+    N, dim = x.shape
+    K = centroids.shape[0]
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, dim), lambda i: (i, 0)),
+            pl.BlockSpec((K, dim), lambda i: (0, 0)),    # resident
+            pl.BlockSpec((K,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, centroids, k_mask)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for the fused k-means assignment kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kernel import kmeans_assign_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def kmeans_assign(x, centroids, k_mask=None, *, block_n: int = 256):
+    """x [N, dim] vs centroids [K, dim] -> (assign [N] i32, best [N] f32)."""
+    N = x.shape[0]
+    K = centroids.shape[0]
+    if k_mask is None:
+        k_mask = jnp.ones((K,), bool)
+    pad = (-N) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    a, s = kmeans_assign_pallas(x, centroids, k_mask, block_n=block_n,
+                                interpret=not _on_tpu())
+    return a[:N], s[:N]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused k-means assignment kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x, centroids, k_mask):
+    """x: [N, dim]; centroids: [K, dim]; k_mask: [K] valid clusters.
+
+    Returns (assign [N] int32, best_sim [N] f32) — argmax cosine over the
+    masked centroid set (first index wins ties, matching jnp.argmax).
+    """
+    sim = x.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    sim = jnp.where(k_mask[None, :], sim, -jnp.inf)
+    return (jnp.argmax(sim, axis=-1).astype(jnp.int32),
+            jnp.max(sim, axis=-1))

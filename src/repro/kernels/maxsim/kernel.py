@@ -1,0 +1,64 @@
+"""Blocked MaxSim Pallas TPU kernel.
+
+Tiling: grid over (query blocks, doc blocks). Each program holds
+``block_q`` queries x ``block_d`` docs in VMEM, flattens tokens into one
+MXU matmul [BQ*Lq, dim] x [dim, BD*Ld], applies the doc-token validity
+mask, and reduces max-over-doc-tokens / sum-over-query-tokens in VREGs.
+
+VMEM budget per program (f32):
+  q tile  BQ*Lq*dim            e.g. 8*32*128*4   = 128 KiB
+  d tile  BD*Ld*dim            e.g. 8*256*128*4  =   1 MiB
+  sim     BQ*Lq*BD*Ld          e.g. 256*2048*4   =   2 MiB
+well under the ~16 MiB/core VMEM of TPU v5e. Token dims are padded to
+multiples of 128 lanes by the wrapper (ops.py), so MXU tiles are aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxsim_kernel(q_ref, qm_ref, d_ref, dm_ref, o_ref):
+    BQ, Lq, dim = q_ref.shape
+    BD, Ld, _ = d_ref.shape
+    q = q_ref[...].astype(jnp.float32).reshape(BQ * Lq, dim)
+    d = d_ref[...].astype(jnp.float32).reshape(BD * Ld, dim)
+    sim = jax.lax.dot_general(q, d, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    sim = sim.reshape(BQ, Lq, BD, Ld)
+    dm = dm_ref[...].reshape(1, 1, BD, Ld)
+    sim = jnp.where(dm, sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)                     # [BQ, Lq, BD]
+    qm = qm_ref[...].reshape(BQ, Lq, 1)
+    best = jnp.where(qm & jnp.isfinite(best), best, 0.0)
+    o_ref[...] = jnp.sum(best, axis=1)               # [BQ, BD]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_d", "interpret"))
+def maxsim_pallas(q, q_mask, d, d_mask, *, block_q: int = 8,
+                  block_d: int = 8, interpret: bool = False):
+    """q: [Nq, Lq, dim]; d: [Nd, Ld, dim] -> scores [Nq, Nd] f32.
+
+    Nq % block_q == 0 and Nd % block_d == 0 (wrapper pads).
+    """
+    Nq, Lq, dim = q.shape
+    Nd, Ld, _ = d.shape
+    assert Nq % block_q == 0 and Nd % block_d == 0, (Nq, Nd)
+    grid = (Nq // block_q, Nd // block_d)
+    return pl.pallas_call(
+        _maxsim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, Lq, dim), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_q, Lq), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_d, Ld, dim), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_d, Ld), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Nq, Nd), jnp.float32),
+        interpret=interpret,
+    )(q, q_mask, d, d_mask)

@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the MaxSim kernel: pads to block multiples,
+dispatches to the Pallas kernel (interpret=True off-TPU), unpads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxsim.kernel import maxsim_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis, mult, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_d"))
+def maxsim(q, q_mask, d, d_mask, *, block_q: int = 8, block_d: int = 8):
+    """Late-interaction scores [Nq, Nd] via the Pallas kernel."""
+    Nq, Nd = q.shape[0], d.shape[0]
+    q = _pad_to(q, 0, block_q)
+    q_mask = _pad_to(q_mask, 0, block_q)
+    d = _pad_to(d, 0, block_d)
+    d_mask = _pad_to(d_mask, 0, block_d)
+    out = maxsim_pallas(q, q_mask, d, d_mask, block_q=block_q,
+                        block_d=block_d, interpret=not _on_tpu())
+    return out[:Nq, :Nd]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the blocked MaxSim kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def maxsim_ref(q, q_mask, d, d_mask):
+    """q: [Nq, Lq, dim]; d: [Nd, Ld, dim]; masks True=valid.
+
+    Returns scores [Nq, Nd] f32: sum over valid query tokens of the max
+    similarity over valid doc tokens.
+    """
+    qf = q.astype(jnp.float32)
+    df = d.astype(jnp.float32)
+    sim = jnp.einsum("qld,nkd->qnlk", qf, df)
+    sim = jnp.where(d_mask[None, :, None, :], sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)
+    best = jnp.where(q_mask[:, None, :] & jnp.isfinite(best), best, 0.0)
+    return jnp.sum(best, axis=-1)

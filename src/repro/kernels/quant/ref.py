@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused dequantize-and-score kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_ref(words, bits: int, dim: int):
+    """words [M, W] uint32 -> codes [M, dim] int32 (little-endian lanes)."""
+    cpw = 32 // bits
+    shifts = jnp.arange(cpw, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    c = (words[:, :, None] >> shifts[None, None, :]) & mask
+    return c.reshape(words.shape[0], dim).astype(jnp.int32)
+
+
+def dequant_score_ref(words, centroid_rows, values, q, bits: int):
+    """Reconstruct 2-bit residual-coded vectors and MaxSim-score them.
+
+    words: [M, W] packed codes; centroid_rows: [M, dim] (pre-gathered
+    coarse centroids); values: [dim, 2^bits] bucket reconstruction values;
+    q: [Lq, dim] query tokens.
+
+    Returns sims [M, Lq] f32 of *unit-renormalized* reconstructions vs q.
+    """
+    dim = centroid_rows.shape[1]
+    codes = unpack_ref(words, bits, dim)                    # [M, dim]
+    res = values[jnp.arange(dim)[None, :], codes]           # [M, dim]
+    v = centroid_rows.astype(jnp.float32) + res.astype(jnp.float32)
+    v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+    return v @ q.astype(jnp.float32).T                      # [M, Lq]

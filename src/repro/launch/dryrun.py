@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * ``jax.jit(step, in_shardings=...).lower(*ShapeDtypeStructs)`` —
+    the SPMD partitioner must accept every sharding,
+  * ``lowered.compile()`` — XLA must schedule it (sharding mismatches,
+    unsupported collectives and shape errors all surface here),
+  * ``compiled.memory_analysis()`` — per-device bytes (does it fit HBM),
+  * ``compiled.cost_analysis()`` — FLOPs/bytes for the roofline terms,
+  * collective bytes parsed from the optimized HLO (see roofline/analysis).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --cell train_4k
+    python -m repro.launch.dryrun --all --multi-pod --json out.json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS
+from repro.launch.input_specs import all_cells, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.api import mesh_context
+from repro.sharding.params import to_shardings
+
+
+def run_cell(arch: str, cell: str, *, multi_pod: bool = False,
+             verbose: bool = True, keep_hlo: bool = False,
+             unroll: bool = False, layers_override=None,
+             cfg_overrides=None, rules_overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    build = build_cell(arch, cell, mesh, unroll=unroll,
+                       layers_override=layers_override,
+                       cfg_overrides=cfg_overrides,
+                       rules_overrides=rules_overrides)
+    with mesh, mesh_context(mesh, build.rules):
+        in_sh = to_shardings(mesh, build.in_specs)
+        out_sh = (to_shardings(mesh, build.out_specs)
+                  if build.out_specs is not None else None)
+        jitted = jax.jit(build.fn, in_shardings=in_sh,
+                         out_shardings=out_sh,
+                         donate_argnums=build.donate)
+        lowered = jitted.lower(*build.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "cell": cell, "kind": build.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0))
+        if cost else 0.0,
+        "note": build.note,
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[k] = int(v)
+        peak = getattr(mem, "peak_memory_in_bytes", None)
+        if peak is not None:
+            result["peak_memory_in_bytes"] = int(peak)
+    # collective bytes from the optimized HLO (roofline collective term)
+    from repro.roofline.analysis import collective_bytes_from_hlo
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    result["collective_bytes"] = coll["total"]
+    result["collectives"] = coll["by_op"]
+    if keep_hlo:
+        result["hlo"] = hlo
+    if verbose:
+        print(f"[{arch} / {cell} @ {result['mesh']}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  flops={result['flops']:.3e} "
+              f"bytes={result['bytes_accessed']:.3e} "
+              f"collective_bytes={coll['total']:.3e}")
+        if "temp_size_in_bytes" in result:
+            print(f"  args={result.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={result['temp_size_in_bytes']/2**30:.2f}GiB "
+                  f"out={result.get('output_size_in_bytes', 0)/2**30:.2f}GiB")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-colbert", action="store_true",
+                    help="also run the paper's own index/search cells")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scans so cost_analysis counts every layer "
+                         "(roofline analysis mode; slower compiles)")
+    args = ap.parse_args(argv)
+
+    archs = ([args.arch] if args.arch else
+             ASSIGNED_ARCHS + (["colbertv2"] if args.include_colbert else []))
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results, failures = [], []
+    for arch in archs:
+        cells = [args.cell] if args.cell else all_cells(arch)
+        for cell in cells:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, cell, multi_pod=mp,
+                                            unroll=args.unroll))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append({"arch": arch, "cell": cell,
+                                     "multi_pod": mp, "error": repr(e)})
+    print(f"\n=== dry-run: {len(results)} ok, {len(failures)} failed ===")
+    for f in failures:
+        print("FAILED:", f["arch"], f["cell"],
+              "multi_pod" if f["multi_pod"] else "single_pod", f["error"])
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"results": results, "failures": failures}, fh,
+                      indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

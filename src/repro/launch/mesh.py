@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+pure data parallelism across pods (gradients all-reduce over
+("pod", "data") — DCN-friendly: only one collective crosses pods).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1D 'data' mesh (tests/smoke)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def batch_axes(mesh) -> object:
+    """The data-parallel axis spec for this mesh ('data' or (pod, data))."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def fsdp_axes(mesh) -> object:
+    """Weight-sharding (ZeRO) axes: same as the DP axes."""
+    return batch_axes(mesh)

@@ -1,0 +1,215 @@
+"""Jittable production step functions — the things the dry-run lowers and
+the train/serve drivers run.
+
+Every step is a pure function (params, [opt_state], batch) -> outputs with
+explicit config closure; sharding comes from (a) the in_shardings the
+launcher passes to jit and (b) the logical-axis ``constrain`` annotations
+inside the models, resolved against the active ``mesh_context``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ColbertConfig, DimeNetConfig, RecsysConfig,
+                                TransformerConfig)
+from repro.models import transformer
+from repro.models.layers import dt
+from repro.train.optimizer import clip_by_global_norm, make_optimizer
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def make_lm_train_step(cfg: TransformerConfig, lr: float = 1e-4,
+                       moe_impl: str = None) -> Tuple[Callable, object]:
+    """train_step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    Microbatched grad accumulation (cfg.train_microbatches) runs inside the
+    jit as a lax.scan, so XLA's scheduler overlaps microbatch i's gradient
+    all-reduce with microbatch i+1's compute.
+    """
+    opt = make_optimizer(cfg.optimizer, lr)
+    moe_impl = moe_impl or cfg.moe_impl
+    n_micro = cfg.train_microbatches
+    acc_dt = dt(cfg.grad_accum_dtype)
+
+    def loss_fn(p, tokens, labels):
+        loss, metrics = transformer.lm_loss(p, tokens, labels, cfg,
+                                            moe_impl=moe_impl)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        else:
+            B = tokens.shape[0]
+            mb = B // n_micro
+            tok_m = tokens.reshape(n_micro, mb, -1)
+            lab_m = labels.reshape(n_micro, mb, -1)
+
+            def body(carry, inp):
+                acc_loss, acc_g = carry
+                t, l = inp
+                loss, g = jax.value_and_grad(loss_fn)(params, t, l)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(acc_dt), acc_g, g)
+                return (acc_loss + loss, acc_g), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), (tok_m, lab_m),
+                unroll=n_micro if cfg.unroll_scans else 1)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / n_micro), grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt
+
+
+def make_lm_prefill_step(cfg: TransformerConfig,
+                         moe_impl: str = None) -> Callable:
+    """prefill_step(params, tokens) -> (last_logits [B, V], cache)."""
+    moe_impl = moe_impl or cfg.moe_impl
+
+    def prefill_step(params, batch):
+        hidden, cache = transformer.prefill(params, batch["tokens"], cfg,
+                                            moe_impl=moe_impl)
+        logits = transformer.logits_head(params, hidden[:, -1:, :], cfg)
+        return logits[:, 0, :], cache
+
+    return prefill_step
+
+
+def make_lm_decode_step(cfg: TransformerConfig,
+                        moe_impl: str = None) -> Callable:
+    """serve_step(params, batch{token [B,1], pos scalar}, cache)
+    -> (logits [B, V], cache). One new token vs a seq_len KV cache."""
+    moe_impl = moe_impl or cfg.moe_impl
+
+    def decode_step(params, cache, batch):
+        logits, cache = transformer.decode_step(
+            params, batch["token"], cache, batch["pos"], cfg,
+            moe_impl=moe_impl)
+        return logits[:, 0, :], cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# GNN (DimeNet)
+# ---------------------------------------------------------------------------
+def make_gnn_train_step(cfg: DimeNetConfig, task: str, n_graphs: int = 1,
+                        lr: float = 1e-3) -> Tuple[Callable, object]:
+    from repro.models.gnn.dimenet import dimenet_loss
+    opt = make_optimizer(cfg.optimizer, lr)
+
+    def train_step(params, opt_state, batch):
+        inputs = {k: v for k, v in batch.items() if k != "targets"}
+
+        def loss_fn(p):
+            return dimenet_loss(p, inputs, batch["targets"], cfg,
+                                task=task, n_graphs=n_graphs)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+def make_recsys_train_step(cfg: RecsysConfig, lr: float = 1e-3
+                           ) -> Tuple[Callable, object]:
+    from repro.models.recsys.models import recsys_loss
+    opt = make_optimizer(cfg.optimizer, lr)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            recsys_loss, has_aux=True)(params, batch, cfg)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt
+
+
+def make_recsys_serve_step(cfg: RecsysConfig) -> Callable:
+    from repro.models.recsys.models import recsys_forward
+
+    def serve_step(params, batch):
+        return recsys_forward(params, batch, cfg)
+
+    return serve_step
+
+
+def make_recsys_retrieval_step(cfg: RecsysConfig, k: int = 100) -> Callable:
+    from repro.models.recsys.models import score_candidates
+
+    def retrieval_step(params, batch):
+        return score_candidates(params, batch, batch["candidates"], cfg,
+                                k=k)
+
+    return retrieval_step
+
+
+# ---------------------------------------------------------------------------
+# ColBERT retrieval serving (the paper's own workload)
+# ---------------------------------------------------------------------------
+def make_colbert_index_step(cfg: ColbertConfig) -> Callable:
+    """index_step(params, batch{doc_tokens}) -> (pooled vecs, pooled mask).
+
+    encode -> TOKEN POOL, data-parallel over the doc batch: the device-side
+    half of index building (the host appends to the IVF/HNSW structure).
+    """
+    from repro.core.pooling import pool_doc_embeddings
+    from repro.models.colbert import encode_docs
+
+    def index_step(params, batch):
+        v, emit = encode_docs(params, batch["doc_tokens"], cfg)
+        method = "none" if cfg.pool_factor <= 1 else cfg.pool_method
+        pooled, pmask = pool_doc_embeddings(v, emit,
+                                            max(cfg.pool_factor, 1), method)
+        return pooled, pmask
+
+    return index_step
+
+
+def make_colbert_search_step(cfg: ColbertConfig, k: int = 10) -> Callable:
+    """search_step(params, batch{q_tokens, doc_vecs, doc_mask})
+    -> (scores [Nq, k], ids [Nq, k]).
+
+    Query encode + MaxSim over the doc shard + top-k. Under SPMD with docs
+    sharded on ``data``, the top-k merge is XLA's job (reduce over the
+    sharded axis).
+    """
+    from repro.core.maxsim import maxsim_scores, maxsim_scores_blocked
+    from repro.models.colbert import encode_queries
+
+    def search_step(params, batch):
+        qv, qm = encode_queries(params, batch["q_tokens"], cfg)
+        if cfg.maxsim_impl == "blocked":
+            # doc blocks stream through the score loop; the full
+            # [Nq, Nd, Lq, Ld] similarity tensor never hits HBM
+            scores = maxsim_scores_blocked(qv, qm, batch["doc_vecs"],
+                                           batch["doc_mask"],
+                                           block=cfg.maxsim_block,
+                                           unroll=cfg.trunk.unroll_scans)
+        else:
+            scores = maxsim_scores(qv, qm, batch["doc_vecs"],
+                                   batch["doc_mask"])
+        return jax.lax.top_k(scores, k)
+
+    return search_step

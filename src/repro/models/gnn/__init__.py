@@ -1,0 +1,6 @@
+from repro.models.gnn.dimenet import (dimenet_forward, init_dimenet,
+                                      build_triplets)
+from repro.models.gnn.sampler import NeighborSampler
+
+__all__ = ["dimenet_forward", "init_dimenet", "build_triplets",
+           "NeighborSampler"]

@@ -1,0 +1,6 @@
+from repro.models.recsys.embedding import embedding_bag, init_tables
+from repro.models.recsys.models import (init_recsys, recsys_forward,
+                                        recsys_loss, score_candidates)
+
+__all__ = ["embedding_bag", "init_tables", "init_recsys", "recsys_forward",
+           "recsys_loss", "score_candidates"]

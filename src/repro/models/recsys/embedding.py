@@ -1,0 +1,73 @@
+"""EmbeddingBag for huge sparse tables — the recsys hot path.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR/CSC sparse; this module IS
+that substrate: ``jnp.take`` over stacked per-field tables + a segment/axis
+reduction over the multi-hot bag, with the table rows **row-sharded over the
+``model`` mesh axis** (the standard sharding for 10^6–10^9-row tables — the
+gather over a row-sharded operand becomes a partial gather + all-reduce
+under SPMD, which is exactly the DLRM all-to-all-equivalent pattern).
+
+Layout: all ``n_sparse`` fields share one stacked table [F, V, D] (fields
+with smaller vocabularies are padded to V rows); lookups take
+ids [B, F, M] (M = multi-hot bag size) -> bags [B, F, D] via sum/mean.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal
+from repro.sharding.api import constrain
+
+
+def init_tables(key, vocab_sizes, embed_dim: int, dtype=jnp.float32):
+    """Stacked tables [F, V_max, D]; per-field rows >= vocab are never hit
+    (ids are generated mod vocab) but keep the stack rectangular."""
+    F = len(vocab_sizes)
+    V = max(vocab_sizes)
+    std = 1.0 / float(embed_dim) ** 0.5
+    return {"tables": trunc_normal(key, (F, V, embed_dim),
+                                   std=std).astype(dtype)}
+
+
+def embedding_bag(params, ids, *, mode: str = "sum", dtype=None):
+    """ids: [B, F, M] int32 -> bags [B, F, D].
+
+    The gather is expressed per-field (take along the row axis) so the row
+    sharding of ``tables`` [F, V(model-sharded), D] is preserved; the bag
+    reduction is a plain sum/mean over M.
+    """
+    t = params["tables"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    t = constrain(t, None, "vocab_rows", None)
+    B, F, M = ids.shape
+    # [B, F, M, D]: gather rows of each field's table
+    gathered = jax.vmap(lambda tab, idx: jnp.take(tab, idx, axis=0),
+                        in_axes=(0, 1), out_axes=1)(t, ids)
+    if mode == "sum":
+        bags = jnp.sum(gathered, axis=2)
+    elif mode == "mean":
+        bags = jnp.mean(gathered, axis=2)
+    else:
+        raise ValueError(mode)
+    return constrain(bags, "batch", None, "embed")
+
+
+def embedding_bag_ragged(params, flat_ids, segment_ids, n_bags: int,
+                         field_ids=None, dtype=None):
+    """Ragged variant: flat_ids [NNZ], segment_ids [NNZ] -> bags [n_bags, D].
+
+    For true multi-hot workloads with variable bag sizes (CSR offsets flattened
+    host-side). field_ids selects the table per id (defaults to field 0).
+    """
+    t = params["tables"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    if field_ids is None:
+        rows = jnp.take(t[0], flat_ids, axis=0)
+    else:
+        V = t.shape[1]
+        rows = jnp.take(t.reshape(-1, t.shape[-1]),
+                        field_ids * V + flat_ids, axis=0)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)

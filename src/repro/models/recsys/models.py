@@ -1,0 +1,157 @@
+"""RecSys architectures: Wide&Deep, DeepFM, FM, DLRM-RM2.
+
+Shared anatomy: huge sparse embedding tables (see embedding.py) -> feature
+interaction (dot | FM sum-square | concat) -> small dense MLP -> CTR logit.
+
+FM 2-way interactions use the O(n*k) sum-square identity (Rendle, ICDM'10):
+    sum_{i<j} <v_i, v_j> x_i x_j = 1/2 * [ (sum_i v_i)^2 - sum_i v_i^2 ]
+so the pairwise term never materializes the [F, F] matrix.
+
+``score_candidates`` is the retrieval_cand cell: one user's tower output
+dotted against 10^6 candidate item embeddings — a single [1, D] x [D, C]
+matmul + top-k (never a loop), candidate axis data-sharded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense, dt, init_dense, trunc_normal
+from repro.models.recsys.embedding import embedding_bag, init_tables
+from repro.sharding.api import constrain
+
+
+def _init_mlp_stack(key, d_in, dims, dtype):
+    ks = jax.random.split(key, len(dims))
+    layers = []
+    for k, d_out in zip(ks, dims):
+        layers.append(init_dense(k, d_in, d_out, bias=True, dtype=dtype))
+        d_in = d_out
+    return layers
+
+
+def _mlp_stack(layers, x, act="relu", last_linear=True):
+    a = act_fn(act)
+    for i, p in enumerate(layers):
+        x = dense(p, x)
+        if i < len(layers) - 1 or not last_linear:
+            x = a(x)
+    return x
+
+
+def init_recsys(key, cfg):
+    dtype = dt(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    D = cfg.embed_dim
+    p = {"tables": init_tables(ks[0], cfg.vocab_sizes, D, dtype)["tables"]}
+    # linear (1st-order / wide) weights: one scalar weight per sparse row
+    p["wide"] = init_tables(ks[1], cfg.vocab_sizes, 1, dtype)["tables"]
+    p["bias"] = jnp.zeros((), dtype)
+
+    if cfg.kind == "dlrm":
+        p["bot_mlp"] = _init_mlp_stack(ks[2], cfg.n_dense,
+                                       cfg.bot_mlp_dims, dtype)
+        n_emb = cfg.n_sparse + 1                       # + bottom-MLP vector
+        n_pairs = n_emb * (n_emb - 1) // 2
+        d_top = n_pairs + cfg.bot_mlp_dims[-1]
+        p["top_mlp"] = _init_mlp_stack(ks[3], d_top, cfg.top_mlp_dims, dtype)
+    elif cfg.kind in ("wide_deep", "deepfm"):
+        d_in = cfg.n_sparse * D + cfg.n_dense
+        p["deep_mlp"] = _init_mlp_stack(ks[2], d_in, cfg.mlp_dims + (1,),
+                                        dtype)
+        if cfg.n_dense:
+            p["dense_lin"] = init_dense(ks[4], cfg.n_dense, 1, bias=False,
+                                        dtype=dtype)
+    elif cfg.kind == "fm":
+        if cfg.n_dense:
+            p["dense_lin"] = init_dense(ks[4], cfg.n_dense, 1, bias=False,
+                                        dtype=dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def _fm_second_order(emb):
+    """emb: [B, F, D] -> [B] via the sum-square trick (O(F*D))."""
+    s = jnp.sum(emb, axis=1)                          # [B, D]
+    ss = jnp.sum(emb * emb, axis=1)                   # [B, D]
+    return 0.5 * jnp.sum(s * s - ss, axis=-1)
+
+
+def _dot_interaction(vecs):
+    """vecs: [B, n, D] -> lower-triangle pairwise dots [B, n(n-1)/2]."""
+    n = vecs.shape[1]
+    g = jnp.einsum("bnd,bmd->bnm", vecs, vecs)        # [B, n, n]
+    iu = jnp.triu_indices(n, k=1)
+    return g[:, iu[0], iu[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def recsys_forward(params, batch, cfg):
+    """batch: {sparse_ids [B, F, M] int32, dense [B, n_dense] f32 (opt)}
+    -> CTR logits [B]."""
+    cdt = dt(cfg.dtype)
+    ids = batch["sparse_ids"]
+    B = ids.shape[0]
+    emb = embedding_bag({"tables": params["tables"]}, ids, dtype=cdt)
+    emb = constrain(emb, "batch", None, "embed")      # [B, F, D]
+    # first-order term (all models)
+    wide = embedding_bag({"tables": params["wide"]}, ids, dtype=cdt)
+    logit = jnp.sum(wide, axis=(1, 2)) + params["bias"].astype(cdt)
+
+    dense_x = batch.get("dense")
+    if dense_x is not None:
+        dense_x = dense_x.astype(cdt)
+
+    if cfg.kind == "fm":
+        logit = logit + _fm_second_order(emb)
+        if dense_x is not None and "dense_lin" in params:
+            logit = logit + dense(params["dense_lin"], dense_x)[:, 0]
+    elif cfg.kind == "deepfm":
+        logit = logit + _fm_second_order(emb)
+        flat = emb.reshape(B, -1)
+        if dense_x is not None:
+            flat = jnp.concatenate([flat, dense_x], -1)
+        logit = logit + _mlp_stack(params["deep_mlp"], flat)[:, 0]
+    elif cfg.kind == "wide_deep":
+        flat = emb.reshape(B, -1)                     # interaction=concat
+        if dense_x is not None:
+            flat = jnp.concatenate([flat, dense_x], -1)
+        logit = logit + _mlp_stack(params["deep_mlp"], flat)[:, 0]
+    elif cfg.kind == "dlrm":
+        bot = _mlp_stack(params["bot_mlp"], dense_x, last_linear=False)
+        vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)
+        inter = _dot_interaction(vecs)                # [B, pairs]
+        top_in = jnp.concatenate([bot, inter], -1)
+        logit = logit + _mlp_stack(params["top_mlp"], top_in)[:, 0]
+    return constrain(logit.astype(jnp.float32), "batch")
+
+
+def recsys_loss(params, batch, cfg):
+    """Binary cross-entropy on CTR labels [B] in {0,1}."""
+    logits = recsys_forward(params, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"loss": loss,
+                  "auc_proxy": jnp.mean((logits > 0) == (y > 0.5))}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def score_candidates(params, batch, candidates, cfg, k: int = 100):
+    """retrieval_cand cell: user context vs [C, D] candidate embeddings.
+
+    The user tower reuses the model's embedding bags (mean over fields) as
+    the query vector; scoring is one matmul over the data-sharded candidate
+    axis + a device top-k (per-shard top-k then global merge under SPMD).
+    """
+    cdt = dt(cfg.dtype)
+    emb = embedding_bag({"tables": params["tables"]},
+                        batch["sparse_ids"], dtype=cdt)     # [B, F, D]
+    user = jnp.mean(emb, axis=1)                            # [B, D]
+    cand = constrain(candidates.astype(cdt), "candidates", None)
+    scores = user @ cand.T                                  # [B, C]
+    scores = constrain(scores, "batch", "candidates")
+    return jax.lax.top_k(scores.astype(jnp.float32), k)

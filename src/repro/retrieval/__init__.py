@@ -1,0 +1,7 @@
+from repro.retrieval.indexer import Indexer
+from repro.retrieval.searcher import Searcher
+from repro.retrieval.metrics import ndcg_at_k, recall_at_k, success_at_k
+from repro.retrieval.evaluate import evaluate_pooling, relative_performance
+
+__all__ = ["Indexer", "Searcher", "ndcg_at_k", "recall_at_k",
+           "success_at_k", "evaluate_pooling", "relative_performance"]

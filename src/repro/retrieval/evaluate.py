@@ -1,0 +1,104 @@
+"""The paper's evaluation harness: relative performance vs unpooled.
+
+``evaluate_pooling`` builds one index per (method, factor) cell plus the
+factor-1 baseline, runs the same queries through all of them, and reports
+each cell's metric as ``100 * metric / baseline_metric`` — the number every
+table in the paper is made of.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ColbertConfig
+from repro.data.corpus import SyntheticRetrievalCorpus
+from repro.retrieval.indexer import Indexer
+from repro.retrieval.metrics import METRICS
+from repro.retrieval.searcher import Searcher
+
+
+@dataclass
+class PoolingCell:
+    method: str
+    factor: int
+    metric: float
+    relative: float               # 100 = baseline
+    n_vectors: int
+    vector_reduction: float       # fraction of vectors removed
+    index_bytes: int
+
+
+@dataclass
+class EvalReport:
+    dataset: str
+    backend: str
+    metric_name: str
+    baseline_metric: float
+    baseline_vectors: int
+    baseline_bytes: int
+    cells: List[PoolingCell] = field(default_factory=list)
+
+    def cell(self, method: str, factor: int) -> Optional[PoolingCell]:
+        for c in self.cells:
+            if c.method == method and c.factor == factor:
+                return c
+        return None
+
+    def table(self) -> str:
+        rows = [f"{'method':12s} {'f':>2s} {'rel':>7s} {'metric':>7s} "
+                f"{'vecs':>8s} {'reduct':>7s} {'bytes':>10s}"]
+        rows.append(f"{'baseline':12s} {1:2d} {100.0:7.2f} "
+                    f"{self.baseline_metric:7.4f} {self.baseline_vectors:8d}"
+                    f" {0.0:7.1%} {self.baseline_bytes:10d}")
+        for c in self.cells:
+            rows.append(f"{c.method:12s} {c.factor:2d} {c.relative:7.2f} "
+                        f"{c.metric:7.4f} {c.n_vectors:8d} "
+                        f"{c.vector_reduction:7.1%} {c.index_bytes:10d}")
+        return "\n".join(rows)
+
+
+def relative_performance(metric: float, baseline: float) -> float:
+    return 100.0 * metric / baseline if baseline > 0 else 0.0
+
+
+def evaluate_pooling(params, cfg: ColbertConfig,
+                     corpus: SyntheticRetrievalCorpus,
+                     methods: Sequence[str] = ("ward", "kmeans",
+                                               "sequential"),
+                     factors: Sequence[int] = (2, 3, 4, 6),
+                     backend: str = "plaid",
+                     metric_name: str = "ndcg@10",
+                     k: int = 10, query_maxlen: Optional[int] = None,
+                     **index_kw) -> EvalReport:
+    """Full paper-protocol evaluation on one dataset."""
+    metric_fn = METRICS[metric_name]
+    doc_tokens = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    q_tokens = corpus.query_token_batch(query_maxlen
+                                        or (cfg.query_maxlen - 2))
+
+    def run(method: str, factor: int):
+        idx, stats = Indexer(params, cfg, pool_method=method,
+                             pool_factor=factor, backend=backend,
+                             **index_kw).build(doc_tokens)
+        searcher = Searcher(params, cfg, idx)
+        ranked = searcher.rankings(q_tokens, k=max(k, 10))
+        return metric_fn(ranked, corpus.qrels), stats
+
+    base_metric, base_stats = run("none", 1)
+    report = EvalReport(dataset=corpus.spec.name, backend=backend,
+                        metric_name=metric_name,
+                        baseline_metric=base_metric,
+                        baseline_vectors=base_stats.n_vectors_stored,
+                        baseline_bytes=base_stats.index_bytes)
+    for method in methods:
+        for factor in factors:
+            m, stats = run(method, factor)
+            report.cells.append(PoolingCell(
+                method=method, factor=factor, metric=m,
+                relative=relative_performance(m, base_metric),
+                n_vectors=stats.n_vectors_stored,
+                vector_reduction=stats.vector_reduction,
+                index_bytes=stats.index_bytes))
+    return report

@@ -1,0 +1,101 @@
+"""Indexer: encode -> TOKEN POOL -> index. The paper's pipeline, end to end.
+
+``Indexer.build`` runs the document side:
+  1. encode documents in device batches with the ColBERT encoder,
+  2. apply ``pool_doc_embeddings`` (the paper's technique — method +
+     pooling factor are config knobs; factor 1 = the unpooled baseline),
+  3. hand the per-document (compacted) vector lists to the chosen index
+     backend (flat | hnsw | plaid).
+
+Data-parallel posture: document batches are independent, so under pjit the
+encode+pool step shards on the ``data`` axis; the index build consumes the
+gathered host-side lists (index construction is host-bound bookkeeping).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ColbertConfig
+from repro.core.index import MultiVectorIndex
+from repro.core.pooling import compact_pooled, pool_doc_embeddings
+from repro.models.colbert import encode_docs
+
+
+@dataclass
+class IndexStats:
+    n_docs: int
+    n_vectors_raw: int
+    n_vectors_stored: int
+    index_bytes: int
+
+    @property
+    def vector_reduction(self) -> float:
+        if self.n_vectors_raw == 0:
+            return 0.0
+        return 1.0 - self.n_vectors_stored / self.n_vectors_raw
+
+
+class Indexer:
+    def __init__(self, params, cfg: ColbertConfig,
+                 pool_method: Optional[str] = None,
+                 pool_factor: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 encode_batch: int = 64, **index_kw):
+        self.params = params
+        self.cfg = cfg
+        self.pool_method = pool_method or cfg.pool_method
+        self.pool_factor = (pool_factor if pool_factor is not None
+                            else cfg.pool_factor)
+        self.backend = backend or cfg.index_backend
+        self.encode_batch = encode_batch
+        self.index_kw = index_kw
+
+    def encode_and_pool(self, doc_tokens: np.ndarray) -> List[np.ndarray]:
+        """doc_tokens [N, L] -> list of per-doc pooled vector arrays."""
+        out: List[np.ndarray] = []
+        N = doc_tokens.shape[0]
+        B = self.encode_batch
+        for lo in range(0, N, B):
+            chunk = doc_tokens[lo:lo + B]
+            pad = B - chunk.shape[0]
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            v, emit = encode_docs(self.params, jnp.asarray(chunk), self.cfg)
+            method = ("none" if self.pool_factor <= 1 else self.pool_method)
+            pooled, pmask = pool_doc_embeddings(
+                v, emit, max(self.pool_factor, 1), method)
+            docs = compact_pooled(pooled, pmask)
+            out.extend(docs[:B - pad] if pad else docs)
+        return out
+
+    def build(self, doc_tokens: np.ndarray):
+        """Returns (MultiVectorIndex, IndexStats)."""
+        doc_vecs = self.encode_and_pool(doc_tokens)
+        raw = self._raw_vector_count(doc_tokens)
+        index = MultiVectorIndex(dim=self.cfg.proj_dim, backend=self.backend,
+                                 doc_maxlen=self.cfg.doc_maxlen,
+                                 n_centroids=self.cfg.n_centroids,
+                                 quant_bits=self.cfg.quant_bits,
+                                 nprobe=self.cfg.nprobe, t_cs=self.cfg.t_cs,
+                                 ndocs=self.cfg.ndocs, **self.index_kw)
+        index.add(doc_vecs)
+        stats = IndexStats(
+            n_docs=len(doc_vecs),
+            n_vectors_raw=raw,
+            n_vectors_stored=int(sum(len(v) for v in doc_vecs)),
+            index_bytes=index.nbytes(),
+        )
+        return index, stats
+
+    def _raw_vector_count(self, doc_tokens: np.ndarray) -> int:
+        """Unpooled emitted-vector count (for Table 3 reductions)."""
+        from repro.models.colbert import (emit_mask_docs,
+                                          prepare_doc_tokens)
+        toks, attn = prepare_doc_tokens(jnp.asarray(doc_tokens),
+                                        self.cfg.doc_maxlen)
+        emit = emit_mask_docs(toks, attn, self.cfg.mask_punctuation)
+        return int(np.asarray(emit).sum())

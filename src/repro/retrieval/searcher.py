@@ -1,0 +1,50 @@
+"""Searcher: query encode -> staged candidate generation -> rerank.
+
+Query-time is UNCHANGED by token pooling (the paper's key deployment
+property): the searcher is identical for pooled and unpooled indexes.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ColbertConfig
+from repro.core.index import MultiVectorIndex
+from repro.models.colbert import encode_queries
+
+
+class Searcher:
+    def __init__(self, params, cfg: ColbertConfig,
+                 index: MultiVectorIndex, encode_batch: int = 64):
+        self.params = params
+        self.cfg = cfg
+        self.index = index
+        self.encode_batch = encode_batch
+
+    def encode(self, query_tokens: np.ndarray) -> np.ndarray:
+        """[Nq, L] -> [Nq, Lq, dim] (all expansion slots emit)."""
+        out = []
+        N = query_tokens.shape[0]
+        B = self.encode_batch
+        for lo in range(0, N, B):
+            chunk = query_tokens[lo:lo + B]
+            pad = B - chunk.shape[0]
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            v, _ = encode_queries(self.params, jnp.asarray(chunk), self.cfg)
+            v = np.asarray(v)
+            out.append(v[:B - pad] if pad else v)
+        return np.concatenate(out)
+
+    def search(self, query_tokens: np.ndarray, k: int = 10
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """[Nq, L] raw token ids -> (scores [Nq, k], doc ids [Nq, k])."""
+        qv = self.encode(query_tokens)
+        return self.index.search_batch(qv, k=k)
+
+    def rankings(self, query_tokens: np.ndarray, k: int = 10
+                 ) -> List[List[int]]:
+        _, ids = self.search(query_tokens, k)
+        return [[int(d) for d in row if d >= 0] for row in ids]

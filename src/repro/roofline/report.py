@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the runner JSON.
+
+    PYTHONPATH=src python -m repro.roofline.report roofline_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.roofline import hw
+
+GIB = 2 ** 30
+
+
+def _mem_line(r: dict) -> str:
+    args = r.get("argument_size_in_bytes", 0) / GIB
+    temp = r.get("temp_size_in_bytes", 0) / GIB
+    out = r.get("output_size_in_bytes", 0) / GIB
+    tot = args + temp
+    fits = "yes" if tot <= hw.HBM_BYTES / GIB else "**NO**"
+    return f"{args:7.2f} | {temp:7.2f} | {out:7.2f} | {fits}"
+
+
+def dryrun_table(results: list) -> str:
+    rows = ["| arch | cell | mesh | compile_s | args GiB | temp GiB | "
+            "out GiB | fits 16GiB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        for key in ("single_pod", "multi_pod"):
+            if key not in r:
+                continue
+            d = r[key]
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {d['mesh']} | "
+                f"{d['compile_s']:.0f} | {_mem_line(d)} |")
+    return "\n".join(rows)
+
+
+def roofline_table(results: list) -> str:
+    rows = ["| arch | cell | compute_s | memory_s | collective_s | "
+            "bottleneck | useful/HLO | MFU@roof |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        t = r["terms"]
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"**{t['bottleneck']}** | {t['useful_flops_frac']:.1%} | "
+            f"{t['mfu']:.1%} |")
+    return "\n".join(rows)
+
+
+def collective_summary(results: list) -> str:
+    rows = ["| arch | cell | all-reduce | all-gather | reduce-scatter | "
+            "all-to-all | permute |", "|---|---|---|---|---|---|---|"]
+    for r in results:
+        c = r.get("single_pod", {}).get("collectives", {})
+
+        def fmt(op):
+            e = c.get(op)
+            return f"{e['bytes']/2**20:.0f}M x{e['count']}" if e else "-"
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {fmt('all-reduce')} | "
+            f"{fmt('all-gather')} | {fmt('reduce-scatter')} | "
+            f"{fmt('all-to-all')} | {fmt('collective-permute')} |")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0]
+    with open(path) as f:
+        data = json.load(f)
+    results = data["results"]
+    print("## Dry-run matrix\n")
+    print(dryrun_table(results))
+    print("\n## Roofline terms (single-pod, 256 chips)\n")
+    print(roofline_table(results))
+    print("\n## Collective traffic per step (single-pod)\n")
+    print(collective_summary(results))
+    if data.get("failures"):
+        print("\n## Failures\n")
+        for f_ in data["failures"]:
+            print("-", f_)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

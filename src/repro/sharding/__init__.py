@@ -1,0 +1,7 @@
+from repro.sharding.api import (  # noqa: F401
+    MeshContext,
+    constrain,
+    current_ctx,
+    logical_spec,
+    mesh_context,
+)

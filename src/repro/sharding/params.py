@@ -1,0 +1,145 @@
+"""Parameter-tree PartitionSpecs per architecture family.
+
+Megatron-style tensor parallelism + ZeRO/FSDP weight sharding:
+
+  * column-parallel weights (wq/wk/wv, mlp w1/w3, lm_head): output dim on
+    ``model``, input dim on the FSDP axis (``data``; + ``pod`` multi-pod).
+  * row-parallel weights (wo, mlp w2): input dim on ``model``.
+  * MoE experts [E, d, f]: E on ``model`` (EP == TP axis; 384/64 experts
+    divide 16), d on FSDP.
+  * embeddings/lm_head: vocab dim on ``model``.
+  * norms/biases: replicated (tiny).
+  * recsys tables [F, V, D]: V row-sharded on ``model``.
+  * optimizer slots inherit the param's spec (adamw m/v) or the reduced
+    spec with the averaged dim dropped (adafactor vr/vc) — ZeRO-sharded
+    optimizer state by construction.
+
+Specs are produced by matching path suffixes and padding leading ``None``s
+to the leaf rank (stacked-layer leading dims stay unsharded — layers are
+scanned, not sharded).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import tree_paths
+
+Axis = Optional[object]
+
+
+def _pad(spec_tail: Tuple, rank: int) -> P:
+    pad = rank - len(spec_tail)
+    assert pad >= 0, (spec_tail, rank)
+    return P(*([None] * pad + list(spec_tail)))
+
+
+def lm_param_rules(fsdp: Axis, model: str = "model"):
+    """Ordered (regex on path suffix, trailing-dims spec) rules."""
+    return [
+        (r"attn/wq/w$", (fsdp, model)),
+        (r"attn/wk/w$", (fsdp, model)),
+        (r"attn/wv/w$", (fsdp, model)),
+        (r"attn/wo/w$", (model, fsdp)),
+        (r"attn/w[qkv]/b$", (model,)),
+        (r"attn/wo/b$", (None,)),
+        (r"(q|k)_norm/scale$", (None,)),
+        (r"mlp/w[13]/w$", (fsdp, model)),
+        (r"mlp/w2/w$", (model, fsdp)),
+        (r"mlp/w[13]/b$", (model,)),
+        (r"mlp/w2/b$", (None,)),
+        (r"moe/router/w$", (None, None)),
+        (r"moe/w[13]$", (model, fsdp, None)),
+        (r"moe/w2$", (model, None, fsdp)),
+        (r"moe/shared_w[13]/w$", (fsdp, model)),
+        (r"moe/shared_w2/w$", (model, fsdp)),
+        (r"embed/table$", (model, fsdp)),
+        (r"pos_embed/table$", (None, None)),
+        (r"lm_head/w$", (fsdp, model)),
+        (r"lm_head/b$", (model,)),
+        (r"norm/scale$", (None,)),
+        (r"norm/bias$", (None,)),
+        (r"proj/w$", (None, None)),      # ColBERT head: tiny, replicated
+        (r"proj/b$", (None,)),
+    ]
+
+
+def gnn_param_rules(fsdp: Axis, model: str = "model"):
+    # DimeNet params are ~1M: replicate everything.
+    return [(r".*", ())]
+
+
+def recsys_param_rules(fsdp: Axis, model: str = "model"):
+    return [
+        (r"tables$", (None, model, None)),   # [F, V(model), D]
+        (r"wide$", (None, model, None)),
+        (r".*", ()),                         # MLPs tiny: replicated
+    ]
+
+
+def spec_for_path(path: str, rank: int, rules) -> P:
+    for pat, tail in rules:
+        if re.search(pat, path):
+            return _pad(tuple(tail), rank)
+    return P()                               # replicated fallback
+
+
+def param_specs(params, rules) -> Dict[str, P]:
+    """Tree of PartitionSpecs shaped like ``params`` (dict paths)."""
+    flat = {p: spec_for_path(p, getattr(a, "ndim", len(a.shape)), rules)
+            for p, a in tree_paths(params)}
+    return _unflatten_like(params, flat)
+
+
+def _unflatten_like(tree, flat: Dict[str, P]):
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            out = [walk(v, f"{prefix}{i}/") for i, v in enumerate(node)]
+            return type(node)(out)
+        return flat[prefix[:-1]]
+    return walk(tree, "")
+
+
+def opt_state_specs(opt_state_shape, p_specs, optimizer: str):
+    """Specs for the optimizer state pytree given the params' specs.
+
+    adamw: m/v mirror params. adafactor: vr drops the last dim's axis,
+    vc drops the second-to-last. scalars replicated.
+    """
+    if optimizer == "adamw":
+        return {"step": P(), "m": p_specs, "v": p_specs}
+
+    def reduce_spec(spec: P, drop_last: bool) -> P:
+        lst = list(spec)
+        if not lst:
+            return P()
+        if drop_last:
+            return P(*lst[:-1])
+        return P(*(lst[:-2] + lst[-1:]))
+
+    def walk(shape_node, spec_node):
+        if isinstance(shape_node, dict) and ("vr" in shape_node
+                                             or "v" in shape_node):
+            if "vr" in shape_node:
+                return {"vr": reduce_spec(spec_node, True),
+                        "vc": reduce_spec(spec_node, False)}
+            return {"v": spec_node}
+        if isinstance(shape_node, dict):
+            return {k: walk(v, spec_node[k]) for k, v in shape_node.items()}
+        if isinstance(shape_node, (list, tuple)):
+            return type(shape_node)(
+                walk(v, spec_node[i]) for i, v in enumerate(shape_node))
+        return spec_node
+    return {"step": P(), "slots": walk(opt_state_shape["slots"], p_specs)}
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

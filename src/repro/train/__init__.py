@@ -1,0 +1,6 @@
+from repro.train.optimizer import make_optimizer, Optimizer
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import Trainer, TrainConfig
+
+__all__ = ["make_optimizer", "Optimizer", "CheckpointManager", "Trainer",
+           "TrainConfig"]

@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing: atomic shard writes + manifest, and
+RESHARDING restore (elastic N -> M devices).
+
+Layout per step:
+    <dir>/step_<N>.tmp/            (write in progress)
+        shard_<i>.npz              (flat path -> array chunks)
+        manifest.json              (paths, shapes, dtypes, step, extra)
+    <dir>/step_<N>/                (atomic os.replace when complete)
+
+Arrays are written as HOST numpy (fully replicated view), so restore can
+device_put onto ANY mesh/sharding — the elastic-rescale path. Writes go
+through a background thread (async checkpointing: the train loop donates a
+host copy and keeps stepping). A ``latest`` marker enables restart-on-crash.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.layers import tree_paths
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return _listify(tree)
+
+
+def _listify(node):
+    """Convert dict nodes whose keys are 0..n-1 back into lists."""
+    if not isinstance(node, dict):
+        return node
+    out = {k: _listify(v) for k, v in node.items()}
+    if out and all(k.isdigit() for k in out):
+        idx = sorted(out, key=int)
+        if idx == [str(i) for i in range(len(idx))]:
+            return [out[k] for k in idx]
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, max_to_keep: int = 3,
+                 shard_mb: int = 256, async_write: bool = True):
+        self.dir = directory
+        self.max_to_keep = max_to_keep
+        self.shard_bytes = shard_mb * 1024 * 1024
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        host = {p: np.asarray(jax.device_get(a))
+                for p, a in tree_paths(tree)}
+        if self.async_write:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               extra: Dict) -> None:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.isdir(final):          # step already published: idempotent
+            return
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "entries": {},
+                    "n_shards": 0}
+        shard, shard_sz, shard_id = {}, 0, 0
+
+        def flush():
+            nonlocal shard, shard_sz, shard_id
+            if shard:
+                np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **shard)
+                shard_id += 1
+                shard, shard_sz = {}, 0
+
+        for i, (path, arr) in enumerate(sorted(host.items())):
+            key = f"a{i}"
+            manifest["entries"][path] = {
+                "shard": shard_id, "key": key,
+                "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            shard[key] = arr
+            shard_sz += arr.nbytes
+            if shard_sz >= self.shard_bytes:
+                flush()
+        flush()
+        manifest["n_shards"] = shard_id
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, final)           # atomic publish
+        with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "latest.tmp"),
+                   os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.max_to_keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        marker = os.path.join(self.dir, "latest")
+        if os.path.exists(marker):
+            with open(marker) as f:
+                s = int(f.read().strip())
+            if os.path.isdir(os.path.join(self.dir, f"step_{s}")):
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                shardings=None) -> Tuple[int, Any, Dict]:
+        """Returns (step, tree, extra). ``shardings``: optional pytree (or
+        flat path->NamedSharding dict) to reshard onto the CURRENT mesh —
+        the restore path is how elastic rescaling works."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        shards = {i: np.load(os.path.join(d, f"shard_{i}.npz"))
+                  for i in range(manifest["n_shards"])}
+        flat = {}
+        for path, e in manifest["entries"].items():
+            arr = shards[e["shard"]][e["key"]]
+            if shardings is not None:
+                sh = (shardings.get(path) if isinstance(shardings, dict)
+                      else None)
+                if sh is not None:
+                    arr = jax.device_put(arr, sh)
+            flat[path] = arr
+        tree = _unflatten(flat)
+        return step, tree, manifest.get("extra", {})

@@ -1,0 +1,62 @@
+"""Beyond-paper pooled-cascade retrieval: quality ~ fine index at a
+fraction of the stage-1 scan cost."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
+from repro.models.colbert import init_colbert
+from repro.retrieval.cascade import build_cascade
+from repro.retrieval.indexer import Indexer
+from repro.retrieval.metrics import ndcg_at_k
+from repro.retrieval.searcher import Searcher
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = DatasetSpec("casc", n_docs=100, n_queries=16, n_topics=8,
+                       doc_len_mean=36, doc_len_std=6, seed=13)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    return cfg, params, corpus
+
+
+def test_cascade_quality_vs_flat(setup):
+    cfg, params, corpus = setup
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    cascade = build_cascade(params, cfg, toks, coarse_factor=6,
+                            fine_factor=2, candidates=24)
+    fine_idx, _ = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                          backend="flat").build(toks)
+    searcher = Searcher(params, cfg, fine_idx)
+    q_tokens = corpus.query_token_batch(cfg.query_maxlen - 2)
+    qv = searcher.encode(q_tokens)
+
+    _, ids_fine = fine_idx.search_batch(qv, k=10)
+    _, ids_casc = cascade.search_batch(qv, k=10)
+    n_fine = ndcg_at_k([list(r) for r in ids_fine], corpus.qrels, 10)
+    n_casc = ndcg_at_k([list(r) for r in ids_casc], corpus.qrels, 10)
+    # cascade quality within 10% of the fine index it reranks with
+    assert n_casc >= 0.9 * n_fine, (n_casc, n_fine)
+    # stage-1 scan touches ~1/3 the vectors of the fine index
+    fine_vecs = sum(len(d) for d in fine_idx.docs)
+    assert cascade.stage1_vectors() < 0.5 * fine_vecs
+
+
+def test_cascade_crud_add(setup):
+    cfg, params, corpus = setup
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    cascade = build_cascade(params, cfg, toks[:80], coarse_factor=4,
+                            fine_factor=2)
+    coarse = Indexer(params, cfg, pool_method="ward", pool_factor=4,
+                     backend="flat").encode_and_pool(toks[80:])
+    fine = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                   backend="flat").encode_and_pool(toks[80:])
+    ids = cascade.add(coarse, fine)
+    assert list(ids) == list(range(80, 100))
+    searcher = Searcher(params, cfg, None)
+    qv = searcher.encode(corpus.query_token_batch(cfg.query_maxlen - 2)[:2])
+    s, i = cascade.search(np.asarray(qv)[0], k=5)
+    assert len(i) == 5

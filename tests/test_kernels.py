@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp ref oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.maxsim.ops import maxsim
+from repro.kernels.maxsim.ref import maxsim_ref
+from repro.kernels.quant.ops import dequant_score
+from repro.kernels.quant.ref import dequant_score_ref
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+# ---------------------------------------------------------------- maxsim
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nq,lq,nd,ld,dim", [
+    (3, 32, 9, 64, 128), (8, 16, 16, 128, 64), (1, 8, 5, 32, 128),
+    (13, 32, 7, 256, 128),
+])
+def test_maxsim_sweep(nq, lq, nd, ld, dim, dtype):
+    rng = np.random.default_rng(nq * ld)
+    q = jnp.asarray(rng.normal(size=(nq, lq, dim)), dtype)
+    d = jnp.asarray(rng.normal(size=(nd, ld, dim)), dtype)
+    qm = jnp.asarray(rng.random((nq, lq)) > 0.2)
+    dm = jnp.asarray(rng.random((nd, ld)) > 0.2)
+    out = maxsim(q, qm, d, dm, block_q=4, block_d=4)
+    ref = maxsim_ref(q, qm, d, dm)
+    np.testing.assert_allclose(out, ref, rtol=tol(dtype), atol=tol(dtype)
+                               * np.abs(np.asarray(ref)).max())
+
+
+def test_maxsim_all_docs_masked():
+    q = jnp.ones((2, 4, 8), jnp.float32)
+    d = jnp.ones((2, 4, 8), jnp.float32)
+    qm = jnp.ones((2, 4), bool)
+    dm = jnp.zeros((2, 4), bool)
+    out = maxsim(q, qm, d, dm, block_q=2, block_d=2)
+    assert np.allclose(np.asarray(out), 0.0)
+
+
+# --------------------------------------------------------- kmeans_assign
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,k,dim", [(100, 8, 64), (257, 32, 128),
+                                     (64, 5, 32)])
+def test_kmeans_assign_sweep(n, k, dim, dtype):
+    rng = np.random.default_rng(n + k)
+    x = jnp.asarray(rng.normal(size=(n, dim)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, dim)), dtype)
+    km = jnp.asarray(np.arange(k) < max(k - 2, 1))
+    a, s = kmeans_assign(x, c, km, block_n=64)
+    ar, sr = kmeans_assign_ref(x, c, km)
+    assert (np.asarray(a) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=tol(dtype), atol=1e-2)
+
+
+# ------------------------------------------------------------- quant
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("m,dim,lq", [(100, 128, 16), (300, 64, 32)])
+def test_dequant_score_sweep(m, dim, lq, bits):
+    from repro.core.quantization import encode, train_codec
+    rng = np.random.default_rng(m + bits)
+    vecs = rng.normal(size=(m, dim)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=-1, keepdims=True)
+    cents = rng.normal(size=(16, dim)).astype(np.float32)
+    cents /= np.linalg.norm(cents, axis=-1, keepdims=True)
+    codec = train_codec(jnp.asarray(vecs), jnp.asarray(cents), bits=bits)
+    ids, words = encode(codec, jnp.asarray(vecs))
+    q = jnp.asarray(rng.normal(size=(lq, dim)), jnp.float32)
+    out = dequant_score(words, ids, codec.centroids, codec.values, q,
+                        bits=bits, block_m=64)
+    rows = jnp.take(codec.centroids, ids, axis=0)
+    ref = dequant_score_ref(words, rows, codec.values, q, bits=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_pack_unpack_roundtrip():
+    from repro.core.quantization import pack_codes, unpack_codes
+    rng = np.random.default_rng(0)
+    for bits in (2, 4, 8):
+        codes = jnp.asarray(rng.integers(0, 1 << bits, (50, 128)), jnp.int32)
+        words = pack_codes(codes, bits)
+        back = unpack_codes(words, bits, 128)
+        assert (np.asarray(back) == np.asarray(codes)).all()
+
+
+# ----------------------------------------------------- flash_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,sq,skv,dh,causal", [
+    (2, 4, 2, 128, 128, 64, True),
+    (1, 8, 8, 256, 256, 128, True),
+    (2, 4, 1, 128, 512, 64, False),
+    (1, 4, 2, 128, 512, 64, True),      # decode-ish: q shorter than kv
+    (1, 2, 2, 64, 64, 128, True),
+])
+def test_flash_attention_sweep(b, h, kv, sq, skv, dh, causal, dtype):
+    rng = np.random.default_rng(sq + skv)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, kv, skv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, kv, skv, dh)), dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    r = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        rtol=tol(dtype), atol=tol(dtype) * 4)
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel agrees with the model's chunked-attention reference path."""
+    from repro.models.attention import _chunked_attn
+    rng = np.random.default_rng(5)
+    B, S, H, dh = 2, 256, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    o_model = _chunked_attn(q, k, v, causal=True, chunk=64)
+    o_kernel = flash_attention(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3),
+                               causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o_kernel),
+                               np.asarray(o_model.transpose(0, 2, 1, 3)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,128 @@
+"""Core technique tests: Ward == SciPy, k-means sanity, pooling invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.cluster.hierarchy import fcluster, linkage
+
+from repro.core.kmeans import kmeans_cluster_batch
+from repro.core.pooling import (compact_pooled, pool_doc_embeddings,
+                                vector_counts)
+from repro.core.ward import ward_cluster_batch
+
+
+def canon(labels):
+    """Canonical form of a partition labelling (first-appearance order)."""
+    m, out = {}, []
+    for v in labels:
+        if v not in m:
+            m[v] = len(m)
+        out.append(m[v])
+    return tuple(out)
+
+
+@pytest.mark.parametrize("factor", [2, 3, 4, 6])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ward_matches_scipy(factor, seed):
+    rng = np.random.default_rng(seed)
+    B, N, d = 4, 32, 16
+    x = rng.normal(size=(B, N, d)).astype(np.float32)
+    mask = np.ones((B, N), bool)
+    mask[1, 25:] = False
+    mask[3, 10:] = False
+    assign = np.asarray(ward_cluster_batch(jnp.asarray(x),
+                                           jnp.asarray(mask), factor))
+    for b in range(B):
+        xv = x[b][mask[b]]
+        xv /= np.linalg.norm(xv, axis=-1, keepdims=True)
+        k = xv.shape[0] // factor + 1
+        sc = fcluster(linkage(xv, method="ward"), t=k, criterion="maxclust")
+        assert canon(sc) == canon(assign[b][mask[b]]), (b, factor)
+
+
+def test_ward_cosine_equals_euclidean_on_unit_vectors():
+    # the monotone-map equivalence the paper's method relies on
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(20, 8)).astype(np.float32)
+    xu = x / np.linalg.norm(x, axis=-1, keepdims=True)
+    a1 = np.asarray(ward_cluster_batch(jnp.asarray(x[None]),
+                                       jnp.ones((1, 20), bool), 3))[0]
+    a2 = np.asarray(ward_cluster_batch(jnp.asarray(3.7 * xu[None]),
+                                       jnp.ones((1, 20), bool), 3))[0]
+    assert canon(a1) == canon(a2)   # scaling is normalized away
+
+
+@pytest.mark.parametrize("method", ["sequential", "kmeans", "ward"])
+@pytest.mark.parametrize("factor", [2, 3, 4])
+def test_pooling_reduces_count(method, factor):
+    rng = np.random.default_rng(factor)
+    B, N, d = 3, 48, 8
+    x = rng.normal(size=(B, N, d)).astype(np.float32)
+    mask = np.ones((B, N), bool)
+    mask[0, 40:] = False
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                        factor, method)
+    n_raw, n_pool = vector_counts(jnp.asarray(mask), pmask)
+    assert n_pool <= n_raw // factor + B   # at most floor(n/f)+1 per doc
+    assert n_pool >= B                      # at least one vector per doc
+    # pooled vectors are unit (renormalized means)
+    vecs = np.concatenate(compact_pooled(pooled, pmask))
+    np.testing.assert_allclose(np.linalg.norm(vecs, axis=-1), 1.0,
+                               atol=1e-4)
+
+
+def test_pool_factor_one_is_identity():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(2, 16, 8)).astype(np.float32)
+    mask = np.ones((2, 16), bool)
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                        1, "ward")
+    xu = x / np.linalg.norm(x, axis=-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(pooled), xu, atol=1e-5)
+    assert np.asarray(pmask).all()
+
+
+def test_identical_vectors_collapse():
+    """Pooling identical token vectors must keep the shared direction."""
+    v = np.ones((1, 12, 8), np.float32)
+    mask = np.ones((1, 12), bool)
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(v), jnp.asarray(mask),
+                                        4, "ward")
+    vecs = compact_pooled(pooled, pmask)[0]
+    expect = np.ones(8) / np.sqrt(8)
+    for row in vecs:
+        np.testing.assert_allclose(row, expect, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 40), factor=st.integers(2, 6),
+       seed=st.integers(0, 10 ** 6))
+def test_property_cluster_count_bound(n, factor, seed):
+    """Property: every method yields <= floor(n/f)+1 clusters, >= 1."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(1, n, 8)).astype(np.float32)
+    mask = np.ones((1, n), bool)
+    for method in ("ward", "kmeans", "sequential"):
+        pooled, pmask = pool_doc_embeddings(
+            jnp.asarray(x), jnp.asarray(mask), factor, method)
+        k = int(np.asarray(pmask).sum())
+        if method == "sequential":
+            assert k == -(-n // factor)
+        else:
+            assert 1 <= k <= n // factor + 1
+
+
+def test_kmeans_clusters_topical_data():
+    """k-means on clearly separable directions recovers the grouping."""
+    rng = np.random.default_rng(3)
+    centers = np.eye(4, 16, dtype=np.float32)
+    x = np.repeat(centers[None], 8, axis=1).reshape(1, 32, 16)
+    x += 0.01 * rng.normal(size=x.shape).astype(np.float32)
+    mask = np.ones((1, 32), bool)
+    # factor 10 -> k_target = 32//10 + 1 = 4 clusters = the 4 directions
+    assign = np.asarray(kmeans_cluster_batch(jnp.asarray(x),
+                                             jnp.asarray(mask), 10))[0]
+    groups = assign.reshape(4, 8)       # tokens are blocked per direction
+    assert all(len(set(groups[i])) == 1 for i in range(4))
+    assert len({groups[i][0] for i in range(4)}) == 4

@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pooling import compact_pooled, pool_doc_embeddings
+from repro.core.quantization import (decode, encode, pack_codes,
+                                     train_codec, unpack_codes)
+from repro.retrieval.metrics import ndcg_at_k, recall_at_k, success_at_k
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(20, 100), dim=st.sampled_from([16, 32, 64]),
+       bits=st.sampled_from([2, 4]), seed=st.integers(0, 10 ** 6))
+def test_quantization_improves_over_centroid_only(m, dim, bits, seed):
+    """Residual codes must reconstruct at least as well as the bare
+    centroid (the codec's whole point)."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(m, dim)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    c = rng.normal(size=(8, dim)).astype(np.float32)
+    c /= np.linalg.norm(c, axis=-1, keepdims=True)
+    codec = train_codec(jnp.asarray(v), jnp.asarray(c), bits=bits)
+    a, w = encode(codec, jnp.asarray(v))
+    rec = np.asarray(decode(codec, a, w))
+    cos_rec = np.mean(np.sum(v * rec, axis=-1))
+    cent = np.asarray(codec.centroids)[np.asarray(a)]
+    cent /= np.linalg.norm(cent, axis=-1, keepdims=True)
+    cos_cent = np.mean(np.sum(v * cent, axis=-1))
+    assert cos_rec >= cos_cent - 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), dim=st.sampled_from([32, 64, 128]),
+       bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 10 ** 6))
+def test_pack_roundtrip_property(n, dim, bits, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << bits, (n, dim)), jnp.int32)
+    assert (np.asarray(unpack_codes(pack_codes(codes, bits), bits, dim))
+            == np.asarray(codes)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 32), factor=st.integers(2, 5),
+       seed=st.integers(0, 10 ** 6))
+def test_pooled_vectors_lie_in_span_of_inputs(n, factor, seed):
+    """Mean-pooled vectors are convex combinations (pre-normalization)
+    of the originals: cosine to the nearest original must be high when
+    vectors cluster."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(1, 1, 8)).astype(np.float32)
+    x = base + 0.05 * rng.normal(size=(1, n, 8)).astype(np.float32)
+    mask = np.ones((1, n), bool)
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                        factor, "ward")
+    vecs = compact_pooled(pooled, pmask)[0]
+    xu = x[0] / np.linalg.norm(x[0], axis=-1, keepdims=True)
+    sims = vecs @ xu.T
+    assert sims.max(axis=1).min() > 0.95
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 10), seed=st.integers(0, 10 ** 6))
+def test_metric_bounds_and_monotonicity(k, seed):
+    rng = np.random.default_rng(seed)
+    docs = list(rng.permutation(20)[:10])
+    qrels = [{int(d): int(rng.integers(1, 3)) for d in
+              rng.choice(20, 4, replace=False)}]
+    ranked = [docs]
+    for fn in (ndcg_at_k, success_at_k, recall_at_k):
+        v = fn(ranked, qrels, k)
+        assert 0.0 <= v <= 1.0
+    # success/recall are monotone in depth (NDCG is NOT — IDCG grows too)
+    for fn in (success_at_k, recall_at_k):
+        assert fn(ranked, qrels, 20) >= fn(ranked, qrels, k) - 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_maxsim_pooling_score_continuity(seed):
+    """MaxSim score of a pooled doc stays within the min/max token-sim
+    envelope of the original doc (means can't exceed the max)."""
+    from repro.core.maxsim import maxsim_scores
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(1, 16, 8)).astype(np.float32)
+    d /= np.linalg.norm(d, axis=-1, keepdims=True)
+    q = rng.normal(size=(1, 4, 8)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+    mask = np.ones((1, 16), bool)
+    qm = np.ones((1, 4), bool)
+    s_orig = float(maxsim_scores(jnp.asarray(q), jnp.asarray(qm),
+                                 jnp.asarray(d), jnp.asarray(mask))[0, 0])
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(d), jnp.asarray(mask),
+                                        2, "ward")
+    s_pool = float(maxsim_scores(jnp.asarray(q), jnp.asarray(qm),
+                                 pooled, pmask)[0, 0])
+    # pooling can only lower the per-query-token max (mean <= max on the
+    # unit sphere up to renormalization slack)
+    assert s_pool <= s_orig + 0.15 * abs(s_orig) + 0.2
+
+
+def test_hnsw_recall_against_exact():
+    """HNSW with generous ef recovers exact top-1 on clustered data."""
+    from repro.core.hnsw import HNSW
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(500, 16)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=-1, keepdims=True)
+    idx = HNSW(16, m=12, ef_construction=200)
+    idx.add(base)
+    hits = 0
+    for i in range(20):
+        q = base[i] + 0.05 * rng.normal(size=16).astype(np.float32)
+        q /= np.linalg.norm(q)
+        exact = int(np.argmax(base @ q))
+        _, ids = idx.search(q, 5, ef=128)
+        hits += int(exact in list(ids))
+    assert hits >= 18

@@ -1,0 +1,148 @@
+"""Retrieval-stack integration: index backends, CRUD, PLAID staged search,
+metrics, and the paper's end-to-end relative-performance protocol."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.index import MultiVectorIndex
+from repro.retrieval.metrics import ndcg_at_k, recall_at_k, success_at_k
+
+
+def make_topical_docs(rng, dim=16, n_topics=4, n_docs=40):
+    topics = rng.normal(size=(n_topics, dim)).astype(np.float32)
+    docs, labels = [], []
+    for i in range(n_docs):
+        t = i % n_topics
+        v = topics[t] + 0.3 * rng.normal(size=(rng.integers(6, 20), dim))
+        v = v / np.linalg.norm(v, axis=-1, keepdims=True)
+        docs.append(v.astype(np.float32))
+        labels.append(t)
+    return topics, docs, np.array(labels)
+
+
+@pytest.mark.parametrize("backend", ["flat", "hnsw", "plaid"])
+def test_index_topical_retrieval(backend):
+    rng = np.random.default_rng(0)
+    topics, docs, labels = make_topical_docs(rng)
+    idx = MultiVectorIndex(dim=16, backend=backend, doc_maxlen=24,
+                           n_centroids=16, ndocs=64)
+    idx.add(docs)
+    q = topics[1] + 0.2 * rng.normal(size=(5, 16))
+    q = (q / np.linalg.norm(q, axis=-1, keepdims=True)).astype(np.float32)
+    s, i = idx.search(q, k=8)
+    top4 = [labels[d] for d in i[:4]]
+    assert top4.count(1) >= 3, (backend, top4)
+
+
+@pytest.mark.parametrize("backend", ["flat", "hnsw", "plaid"])
+def test_index_crud(backend):
+    rng = np.random.default_rng(1)
+    _, docs, labels = make_topical_docs(rng)
+    idx = MultiVectorIndex(dim=16, backend=backend, doc_maxlen=24,
+                           n_centroids=16, ndocs=64)
+    idx.add(docs[:30])
+    new_ids = idx.add(docs[30:])
+    assert list(new_ids) == list(range(30, 40))
+    q = docs[35][:4]
+    s, i = idx.search(q, k=3)
+    top = int(i[0])
+    idx.delete([top])
+    s2, i2 = idx.search(q, k=3)
+    assert top not in list(i2)
+
+
+def test_plaid_stages_prune_but_find():
+    """PLAID staged search must agree with flat exact search on top-1
+    for easy (well-separated) queries."""
+    rng = np.random.default_rng(2)
+    _, docs, labels = make_topical_docs(rng, n_docs=60)
+    flat = MultiVectorIndex(dim=16, backend="flat", doc_maxlen=24)
+    plaid = MultiVectorIndex(dim=16, backend="plaid", doc_maxlen=24,
+                             n_centroids=32, nprobe=8, ndocs=64,
+                             quant_bits=4)
+    flat.add(docs)
+    plaid.add(docs)
+    hits = 0
+    for d in (3, 17, 42):
+        q = docs[d][:6]
+        _, i_flat = flat.search(q, k=5)
+        _, i_plaid = plaid.search(q, k=5)
+        hits += int(i_flat[0] in list(i_plaid[:3]))
+    assert hits >= 2
+
+
+def test_quantization_reconstruction():
+    from repro.core.quantization import (reconstruction_error, train_codec)
+    rng = np.random.default_rng(3)
+    vecs = rng.normal(size=(500, 32)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=-1, keepdims=True)
+    cents = rng.normal(size=(32, 32)).astype(np.float32)
+    cents /= np.linalg.norm(cents, axis=-1, keepdims=True)
+    cos2 = reconstruction_error(train_codec(jnp.asarray(vecs),
+                                            jnp.asarray(cents), bits=2),
+                                jnp.asarray(vecs))
+    cos4 = reconstruction_error(train_codec(jnp.asarray(vecs),
+                                            jnp.asarray(cents), bits=4),
+                                jnp.asarray(vecs))
+    assert float(cos4) > float(cos2) > 0.5   # more bits, better recon
+
+
+# ------------------------------------------------------------- metrics
+def test_metrics_known_values():
+    ranked = [[1, 2, 3], [9, 8, 7]]
+    qrels = [{1: 2, 3: 1}, {7: 1}]
+    assert success_at_k(ranked, qrels, 1) == 0.5
+    assert success_at_k(ranked, qrels, 3) == 1.0
+    assert recall_at_k(ranked, qrels, 3) == 1.0
+    assert recall_at_k(ranked, qrels, 1) == 0.25    # (1/2 + 0) / 2
+    n = ndcg_at_k(ranked, qrels, 3)
+    # query1: dcg = 3/log2(2) + 1/log2(4) = 3.5; idcg = 3 + 1/log2(3)
+    q1 = 3.5 / (3 + 1 / np.log2(3))
+    q2 = (1 / np.log2(4)) / 1.0
+    np.testing.assert_allclose(n, (q1 + q2) / 2, rtol=1e-6)
+
+
+def test_metrics_perfect_ranking_is_one():
+    qrels = [{0: 2, 1: 1}]
+    assert ndcg_at_k([[0, 1, 5]], qrels, 10) == pytest.approx(1.0)
+    assert recall_at_k([[0, 1]], qrels, 5) == 1.0
+
+
+# --------------------------------------------- end-to-end paper protocol
+def test_evaluate_pooling_end_to_end():
+    from repro.configs import get_smoke_config
+    from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
+    from repro.models.colbert import init_colbert
+    from repro.retrieval.evaluate import evaluate_pooling
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = DatasetSpec("t", n_docs=60, n_queries=12, n_topics=6,
+                       doc_len_mean=30, doc_len_std=5, seed=5)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    rep = evaluate_pooling(params, cfg, corpus, methods=("ward",),
+                           factors=(2,), backend="flat")
+    assert rep.baseline_metric > 0
+    cell = rep.cell("ward", 2)
+    assert cell is not None
+    assert 0.35 <= cell.vector_reduction <= 0.55     # ~50% fewer vectors
+    assert cell.relative > 50                        # sane relative perf
+
+
+def test_indexer_vector_reduction_scaling():
+    """Pooling factor f removes ~ (1 - 1/f) of vectors (paper Table 3)."""
+    from repro.configs import get_smoke_config
+    from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
+    from repro.models.colbert import init_colbert
+    from repro.retrieval.indexer import Indexer
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = DatasetSpec("t2", n_docs=40, n_queries=8, n_topics=4,
+                       doc_len_mean=40, doc_len_std=4, seed=6)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    for f in (2, 3, 4):
+        _, stats = Indexer(params, cfg, pool_method="ward", pool_factor=f,
+                           backend="flat").build(toks)
+        expect = 1 - 1 / f
+        assert abs(stats.vector_reduction - expect) < 0.12, (f, stats)
