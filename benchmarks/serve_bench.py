@@ -1,0 +1,117 @@
+"""Serving throughput benchmark: QPS vs batch size x backend x pool factor.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --docs 300 --queries 96
+
+Measures the batched two-stage engine end to end (encode -> candidates ->
+one traced rerank per microbatch) and emits ``BENCH_serve.json``. The
+headline number is the batch-32 QPS against the "sequential equivalent"
+throughput 1/p50(batch-1): the batched path must win on flat and plaid,
+otherwise batching is overhead, not a feature.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+from repro.launch.serve import serve_microbatches
+from repro.models.colbert import init_colbert
+from repro.retrieval.indexer import Indexer
+from repro.retrieval.searcher import Searcher
+
+
+def bench_cell(params, cfg, corpus, backend: str, pool_factor: int,
+               batch_sizes, n_queries: int, k: int, ndocs: int):
+    indexer = Indexer(params, cfg, pool_method="ward",
+                      pool_factor=pool_factor, backend=backend,
+                      ndocs=ndocs)
+    index, stats = indexer.build(corpus.doc_token_batch(cfg.doc_maxlen - 2))
+    searcher = Searcher(params, cfg, index)
+    q_all = corpus.query_token_batch(cfg.query_maxlen - 2)
+    rows = []
+    for bs in batch_sizes:
+        lat = serve_microbatches(searcher, q_all, bs, n_queries, k=k)
+        lat_ms = lat * 1e3
+        rows.append({
+            "backend": backend, "pool_factor": pool_factor,
+            "batch_size": bs,
+            "qps": bs * len(lat) / float(lat.sum()),
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "index_bytes": stats.index_bytes,
+            "n_vectors": stats.n_vectors_stored,
+        })
+        print(f"{backend:6s} f={pool_factor} bs={bs:3d} "
+              f"qps={rows[-1]['qps']:8.1f} p50={rows[-1]['p50_ms']:7.1f}ms "
+              f"p99={rows[-1]['p99_ms']:7.1f}ms")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scifact")
+    ap.add_argument("--docs", type=int, default=300)
+    ap.add_argument("--queries", type=int, default=96,
+                    help="queries served per (backend, factor, batch) cell")
+    ap.add_argument("--batch-sizes", default="1,8,32")
+    ap.add_argument("--backends", default="flat,plaid")
+    ap.add_argument("--pool-factors", default="1,2")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ndocs", type=int, default=128,
+                    help="PLAID stage-3 survivor budget (keep it a small "
+                         "fraction of --docs so pruning engages, as at "
+                         "production scale)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b]
+    backends = [b for b in args.backends.split(",") if b]
+    factors = [int(f) for f in args.pool_factors.split(",") if f]
+
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = replace(DATASET_SPECS[args.dataset], n_docs=args.docs,
+                   n_queries=max(batch_sizes))
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+
+    results = []
+    for backend in backends:
+        for f in factors:
+            results.extend(bench_cell(params, cfg, corpus, backend, f,
+                                      batch_sizes, args.queries, args.k,
+                                      args.ndocs))
+
+    # headline: batch-32 QPS vs the sequential-equivalent 1/p50(batch-1)
+    speedups = {}
+    big = max(batch_sizes)
+    for backend in backends:
+        for f in factors:
+            cell = {r["batch_size"]: r for r in results
+                    if r["backend"] == backend and r["pool_factor"] == f}
+            if 1 in cell and big in cell:
+                seq_qps = 1e3 / cell[1]["p50_ms"]
+                speedups[f"{backend}_f{f}"] = {
+                    "sequential_qps_equiv": seq_qps,
+                    f"batch{big}_qps": cell[big]["qps"],
+                    "speedup": cell[big]["qps"] / seq_qps,
+                }
+
+    out = {"dataset": args.dataset, "n_docs": args.docs,
+           "batch_sizes": batch_sizes, "results": results,
+           "batch_vs_sequential": speedups}
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"\nwrote {args.out}")
+    for name, s in speedups.items():
+        print(f"  {name}: batch-{big} {s[f'batch{big}_qps']:.1f} qps vs "
+              f"sequential {s['sequential_qps_equiv']:.1f} qps "
+              f"({s['speedup']:.1f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,157 @@
+"""Device-resident CSR document store for multi-vector retrieval.
+
+Every index backend used to keep its own list-of-numpy copy of the
+per-document token vectors and re-pad the whole corpus on every query.
+``DocStore`` replaces that with one flat ``[capacity, dim]`` vector
+tensor plus CSR doc offsets, grown by amortized doubling on ``add``, and
+a *cached* padded ``[n_docs, doc_maxlen, dim]`` device view that flat
+search and candidate rerank gather from without ever re-padding.
+
+Layout:
+  * ``_flat``     [capacity >= n_vectors, dim] float32 — token vectors,
+                  doc-major (host mirror; the device copy is cached).
+  * ``offsets``   [n_docs + 1] int64 — doc d owns rows
+                  ``offsets[d]:offsets[d+1]``.
+  * ``live``      [n_docs] bool — False once a doc is deleted (lazy
+                  delete; storage is reclaimed only by rebuild).
+
+The padded view is rebuilt at most once per mutation epoch and lives on
+device as jnp arrays, so a batch of queries pays zero host->device
+transfer for the corpus.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ragged_arange(counts: np.ndarray) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated: the CSR scatter index.
+
+    e.g. counts [2, 0, 3] -> [0, 1, 0, 1, 2].
+    """
+    counts = np.asarray(counts)
+    total = int(counts.sum())
+    return np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+
+
+class DocStore:
+    def __init__(self, dim: int, doc_maxlen: int = 256,
+                 init_capacity: int = 1024):
+        self.dim = dim
+        self.doc_maxlen = doc_maxlen
+        self._flat = np.zeros((max(init_capacity, 1), dim), np.float32)
+        self._n_vectors = 0
+        self.offsets = np.zeros((1,), np.int64)
+        self.live = np.zeros((0,), bool)
+        self._padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+
+    # ------------------------------------------------------------- sizes
+    @property
+    def n_docs(self) -> int:
+        return len(self.offsets) - 1
+
+    def doc_lengths(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def n_vectors(self, live_only: bool = True) -> int:
+        if not live_only:
+            return self._n_vectors
+        return int(self.doc_lengths()[self.live].sum())
+
+    def nbytes(self, bytes_per_dim: int = 2, live_only: bool = True) -> int:
+        """Footprint of the stored vectors (fp16 by default)."""
+        return self.n_vectors(live_only) * self.dim * bytes_per_dim
+
+    # -------------------------------------------------------------- CRUD
+    def add(self, doc_vectors: Sequence[np.ndarray]) -> np.ndarray:
+        """Append docs (list of [n_i, dim]); returns their ids."""
+        ids = np.arange(self.n_docs, self.n_docs + len(doc_vectors))
+        if len(doc_vectors) == 0:
+            return ids
+        lens = np.array([len(v) for v in doc_vectors], np.int64)
+        total = int(lens.sum())
+        self._reserve(self._n_vectors + total)
+        if total:
+            flat = np.concatenate(
+                [np.asarray(v, np.float32).reshape(-1, self.dim)
+                 for v in doc_vectors])
+            self._flat[self._n_vectors:self._n_vectors + total] = flat
+        self._n_vectors += total
+        self.offsets = np.concatenate(
+            [self.offsets, self.offsets[-1] + np.cumsum(lens)])
+        self.live = np.concatenate(
+            [self.live, np.ones(len(doc_vectors), bool)])
+        self._padded = None
+        return ids
+
+    def _reserve(self, n: int) -> None:
+        cap = len(self._flat)
+        if n <= cap:
+            return
+        while cap < n:
+            cap *= 2
+        grown = np.zeros((cap, self.dim), np.float32)
+        grown[:self._n_vectors] = self._flat[:self._n_vectors]
+        self._flat = grown
+
+    def delete(self, doc_ids) -> None:
+        """Lazy delete: docs stay in storage but drop out of ``live``."""
+        ids = np.asarray(doc_ids, np.int64)
+        self.live[ids] = False
+        # padded cache stays valid — deletion is a query-time mask
+
+    # ------------------------------------------------------------- reads
+    def doc(self, i: int) -> np.ndarray:
+        lo, hi = self.offsets[i], self.offsets[i + 1]
+        return self._flat[lo:hi]
+
+    def docs_list(self) -> List[np.ndarray]:
+        """Per-doc arrays (all docs, deleted included) — compat view."""
+        return [self.doc(i) for i in range(self.n_docs)]
+
+    def padded(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Cached device view: ([n_docs, L, dim], [n_docs, L]) where L is
+        the tightest width, min(doc_maxlen, longest doc) — pooled stores
+        (short docs) should not pay doc_maxlen-wide scans."""
+        if self._padded is None:
+            n = self.n_docs
+            lens = self.doc_lengths()
+            L = int(min(self.doc_maxlen, max(lens.max(initial=0), 1)))
+            out = np.zeros((max(n, 1), L, self.dim), np.float32)
+            mask = np.zeros((max(n, 1), L), bool)
+            if n and self._n_vectors:
+                kept = np.minimum(lens, L)
+                rows = np.repeat(np.arange(n), kept)
+                cols = ragged_arange(kept)
+                src = np.repeat(self.offsets[:-1], kept) + cols
+                out[rows, cols] = self._flat[src]
+                mask[rows, cols] = True
+            self._padded = (jnp.asarray(out), jnp.asarray(mask))
+        return self._padded
+
+    def gather(self, cand: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """cand [Nq, C] doc ids -> ([Nq, C, L, dim], [Nq, C, L]) on device."""
+        d, m = self.padded()
+        idx = jnp.asarray(np.asarray(cand, np.int64))
+        return jnp.take(d, idx, axis=0), jnp.take(m, idx, axis=0)
+
+
+def pad_candidate_sets(qidx: np.ndarray, docs: np.ndarray, n_queries: int,
+                       block: int = 32) -> Tuple[np.ndarray, np.ndarray]:
+    """(query, doc) id pairs -> padded candidate matrix, no per-query loop.
+
+    qidx/docs: parallel int arrays, grouped by query (stable order within
+    a query is preserved). Returns (cand [Nq, C], mask [Nq, C]) with C
+    rounded up to a ``block`` multiple so downstream jit shapes re-use.
+    """
+    counts = np.bincount(qidx, minlength=n_queries)
+    C = max(int(counts.max(initial=0)), 1)
+    # geometric rounding: log-many distinct C values -> log-many jit traces
+    C = block << max(int(np.ceil(np.log2(-(-C // block)))), 0)
+    cand = np.zeros((n_queries, C), np.int64)
+    mask = np.arange(C)[None, :] < counts[:, None]
+    cand[qidx, ragged_arange(counts)] = docs
+    return cand, mask

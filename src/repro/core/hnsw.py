@@ -142,6 +142,21 @@ class HNSW:
             ids.append(i)
         return np.stack(sims), np.stack(ids)
 
+    def probe_tokens(self, qs: np.ndarray, k: int,
+                     ef: Optional[int] = None) -> np.ndarray:
+        """Batched token probe: qs [T, dim] -> vector ids [T, k] (-1 pad).
+
+        The graph walk itself is inherently sequential per token
+        (latency-bound pointer chasing, DESIGN.md §3.6); this batches the
+        bookkeeping so callers get one fixed-shape id matrix for the
+        whole query batch and never touch per-token Python results.
+        """
+        out = np.full((len(qs), k), -1, np.int64)
+        for t, q in enumerate(np.asarray(qs, np.float32)):
+            _, ids = self.search(q, k, ef)
+            out[t, :len(ids)] = ids
+        return out
+
     def nbytes(self) -> int:
         vec = self.vectors.size * 2                     # stored fp16
         edges = sum(len(r) for lvl in self.graph for r in lvl) * 4

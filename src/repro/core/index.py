@@ -10,7 +10,18 @@ All three store *token* vectors grouped by document and return document ids,
 so the evaluation harness is backend-agnostic. Pooling happens upstream
 (retrieval/indexer.py) — the index only ever sees the (possibly pooled)
 per-document vector lists. CRUD: ``add`` appends docs, ``delete`` removes
-them (HNSW deletes lazily, PLAID/Flat compact).
+them (all backends delete lazily; compaction via rebuild).
+
+Serving is a batched two-stage engine over a device-resident ``DocStore``:
+
+    candidates(qs)  -> per-query candidate doc ids   (stage 1, backend-specific)
+    rerank(qs, ...) -> exact MaxSim on the gathered candidates (stage 2, shared)
+
+Stage 1 is batched centroid probing (PLAID: one einsum for the whole
+batch), batched HNSW token probes with a vectorized candidate-set union,
+or — for flat — the whole live corpus. Stage 2 is ONE fixed-shape MaxSim
+batch per query microbatch (the Pallas ``kernels/maxsim`` op on TPU, its
+jnp oracle elsewhere); no backend re-pads the corpus at query time.
 """
 from __future__ import annotations
 
@@ -20,24 +31,16 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.docstore import DocStore, pad_candidate_sets
 from repro.core.hnsw import HNSW
 from repro.core.ivf import train_centroids
-from repro.core.maxsim import maxsim_scores
-from repro.core.plaid import PLAIDIndex, build_plaid_index, plaid_search
+from repro.core.maxsim import (maxsim_all_docs, maxsim_rerank_store,
+                               topk_with_pads)
+from repro.core.plaid import (PLAIDIndex, build_plaid_index,
+                              plaid_candidates)
 from repro.core.quantization import train_codec
 
 BACKENDS = ("flat", "hnsw", "plaid")
-
-
-def _pad_docs(doc_vectors: List[np.ndarray], maxlen: int, dim: int):
-    n = len(doc_vectors)
-    out = np.zeros((n, maxlen, dim), np.float32)
-    mask = np.zeros((n, maxlen), bool)
-    for i, v in enumerate(doc_vectors):
-        k = min(len(v), maxlen)
-        out[i, :k] = v[:k]
-        mask[i, :k] = True
-    return out, mask
 
 
 @dataclass
@@ -58,25 +61,80 @@ class MultiVectorIndex:
     hnsw_candidates: int = 1024    # token hits gathered before doc rerank
 
     # state
-    docs: List[np.ndarray] = field(default_factory=list)
     deleted: set = field(default_factory=set)
+    _store: Optional[DocStore] = None
     _hnsw: Optional[HNSW] = None
     _hnsw_vec2doc: Optional[np.ndarray] = None
     _plaid: Optional[PLAIDIndex] = None
 
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
+        if self.backend != "plaid":
+            self._store = DocStore(self.dim, self.doc_maxlen)
+
+    # ------------------------------------------------------------ doc store
+    @property
+    def store(self) -> DocStore:
+        """The DocStore the shared rerank stage scores against.
+
+        flat/hnsw: the raw stored vectors; plaid: the decoded
+        reconstructions (PLAID scores the compressed domain, so rerank
+        must see what decompression would produce).
+        """
+        if self.backend == "plaid":
+            assert self._plaid is not None, "empty plaid index"
+            return self._plaid.recon_store()
+        return self._store
+
+    @property
+    def n_docs(self) -> int:
+        if self.backend == "plaid":
+            return self._plaid.n_docs if self._plaid is not None else 0
+        return self._store.n_docs
+
+    @property
+    def docs(self) -> List[np.ndarray]:
+        """Compat view: per-doc vector arrays (deleted docs included).
+
+        NOTE: for the plaid backend these are the codec's decoded
+        *reconstructions* (what rerank scores), not the raw inputs —
+        the raw vectors are not retained; first access also builds the
+        reconstruction store (O(corpus) decode).
+        """
+        if self.backend == "plaid":
+            return (self.store.docs_list() if self._plaid is not None
+                    else [])
+        return self._store.docs_list()
+
+    def _live(self) -> np.ndarray:
+        """[n_docs] bool — True for docs that can still be returned.
+
+        flat/hnsw read the DocStore's live mask (single source of truth,
+        shared with nbytes/n_vectors); plaid keeps no raw store, so its
+        liveness comes from the ``deleted`` set.
+        """
+        if self._store is not None:
+            return self._store.live.copy()
+        live = np.ones(self.n_docs, bool)
+        if self.deleted:
+            live[np.fromiter(self.deleted, np.int64)] = False
+        return live
 
     # ------------------------------------------------------------------ build
     def add(self, doc_vectors: List[np.ndarray]) -> np.ndarray:
         """doc_vectors: list of [n_i, dim] unit vectors. Returns doc ids."""
-        doc_vectors = [np.asarray(v, np.float32) for v in doc_vectors]
-        ids = np.arange(len(self.docs), len(self.docs) + len(doc_vectors))
-        self.docs.extend(doc_vectors)
+        if len(doc_vectors) == 0:
+            return np.zeros((0,), np.int64)     # no-op on every backend
+        doc_vectors = [np.asarray(v, np.float32).reshape(-1, self.dim)
+                       for v in doc_vectors]
+        ids = np.arange(self.n_docs, self.n_docs + len(doc_vectors))
         if self.backend == "hnsw":
+            self._store.add(doc_vectors)
             self._add_hnsw(doc_vectors, ids)
         elif self.backend == "plaid":
             self._add_plaid(doc_vectors)
+        else:
+            self._store.add(doc_vectors)
         return ids
 
     def _add_hnsw(self, doc_vectors, ids):
@@ -84,8 +142,7 @@ class MultiVectorIndex:
             self._hnsw = HNSW(self.dim, m=self.hnsw_m,
                               ef_construction=self.hnsw_ef_construction)
             self._hnsw_vec2doc = np.zeros((0,), np.int64)
-        flat = np.concatenate(doc_vectors) if doc_vectors else \
-            np.zeros((0, self.dim), np.float32)
+        flat = np.concatenate(doc_vectors)
         self._hnsw.add(flat)
         lens = np.array([len(v) for v in doc_vectors], np.int64)
         self._hnsw_vec2doc = np.concatenate(
@@ -109,70 +166,117 @@ class MultiVectorIndex:
             tok = np.nonzero(np.isin(self._hnsw_vec2doc,
                                      np.asarray(doc_ids)))[0]
             self._hnsw.delete(tok)
-        # plaid/flat filter deleted ids at query time (compaction via rebuild)
+        if self._store is not None:
+            self._store.delete(np.asarray(doc_ids, np.int64))
+        # plaid filters deleted ids at candidate time (compaction = rebuild)
+
+    # ------------------------------------------------- two-stage batch engine
+    def candidates(self, qs: np.ndarray,
+                   q_mask: Optional[np.ndarray] = None
+                   ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+        """Stage 1: qs [Nq, Lq, dim] -> (cand [Nq, C], mask [Nq, C]).
+
+        Returns ``(None, None)`` for the flat backend: every live doc is
+        a candidate and rerank scores the shared corpus view directly
+        (an all-pairs matmul beats an Nq-fold gather of the corpus).
+        Masked query tokens (q_mask False) are excluded from probing and
+        approximate scoring, matching the rerank-stage semantics.
+        """
+        if self.backend == "flat":
+            return None, None
+        if self.backend == "plaid":
+            return plaid_candidates(self._plaid, qs, nprobe=self.nprobe,
+                                    t_cs=self.t_cs, ndocs=self.ndocs,
+                                    live=self._live(), q_mask=q_mask)
+        return self._hnsw_candidates(qs, q_mask)
+
+    def _hnsw_candidates(self, qs: np.ndarray, q_mask=None):
+        """Batched token probes + vectorized candidate-set union."""
+        Nq, Lq = qs.shape[:2]
+        per_tok = max(self.hnsw_candidates // max(Lq, 1), 8)
+        vec_ids = self._hnsw.probe_tokens(
+            np.asarray(qs, np.float32).reshape(Nq * Lq, self.dim), per_tok)
+        hit = vec_ids >= 0                                 # [Nq*Lq, per_tok]
+        if q_mask is not None:     # masked tokens probe nothing
+            hit &= np.asarray(q_mask, bool).reshape(Nq * Lq, 1)
+        qidx = np.repeat(np.arange(Nq), Lq * per_tok)[hit.ravel()]
+        docs = self._hnsw_vec2doc[vec_ids[hit]]
+        qd = np.unique(qidx * np.int64(max(self.n_docs, 1)) + docs)
+        qidx, docs = qd // max(self.n_docs, 1), qd % max(self.n_docs, 1)
+        live = self._live()
+        keep = live[docs]
+        return pad_candidate_sets(qidx[keep], docs[keep], Nq)
+
+    def rerank(self, qs: np.ndarray, cand: Optional[np.ndarray] = None,
+               cand_mask: Optional[np.ndarray] = None,
+               q_mask: Optional[np.ndarray] = None) -> jnp.ndarray:
+        """Stage 2 (shared): exact MaxSim on gathered candidates.
+
+        One traced fixed-shape batch per call; invalid/padded candidate
+        slots come back as -inf. ``cand=None`` scores the whole live
+        corpus (scores [Nq, n_docs]); otherwise scores [Nq, C].
+        """
+        qs = jnp.asarray(qs, jnp.float32)
+        qm = (jnp.ones(qs.shape[:2], bool) if q_mask is None
+              else jnp.asarray(q_mask))
+        if cand is None:
+            d, dm = self.store.padded()
+            scores = maxsim_all_docs(qs, qm, d, dm)        # [Nq, n_docs]
+            return jnp.where(jnp.asarray(self._live())[None, :],
+                             scores, -jnp.inf)
+        return maxsim_rerank_store(self.store, qs, qm, cand, cand_mask)
+
+    def _rerank_dense(self, qs, cand, cand_mask, q_mask) -> jnp.ndarray:
+        """Dense-candidate rerank: when the padded candidate width reaches
+        corpus size, an Nq-fold gather repeats most of the corpus per
+        query — one shared all-pairs scan + a membership mask is cheaper.
+        Returns scores [Nq, n_docs] (-inf outside each query's set)."""
+        scores = self.rerank(qs, None, None, q_mask)   # [Nq, n_docs]
+        member = np.zeros((len(cand), self.n_docs), bool)
+        rows = np.repeat(np.arange(len(cand)),
+                         cand.shape[1])[np.asarray(cand_mask).ravel()]
+        member[rows, cand[cand_mask]] = True
+        return jnp.where(jnp.asarray(member), scores, -jnp.inf)
 
     # ----------------------------------------------------------------- search
+    def search_batch(self, qs: np.ndarray, k: int = 10,
+                     q_mask: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """qs: [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -inf/-1 pads)."""
+        qs = np.asarray(qs, np.float32)
+        Nq = len(qs)
+        if self.n_docs == 0:
+            return (np.full((Nq, k), -np.inf, np.float32),
+                    np.full((Nq, k), -1, np.int64))
+        cand, cand_mask = self.candidates(qs, q_mask)
+        if cand is not None and cand.shape[1] >= self.n_docs:
+            scores = self._rerank_dense(qs, cand, cand_mask, q_mask)
+            cand = None                 # scores are corpus-wide, ids direct
+        else:
+            scores = self.rerank(qs, cand, cand_mask, q_mask)
+        return topk_with_pads(scores, cand, k)
+
     def search(self, q: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray]:
         """q: [Lq, dim] query token vectors -> (scores [k'], doc ids [k'])."""
-        if self.backend == "flat":
-            s, i = self._search_flat(q, k + len(self.deleted))
-        elif self.backend == "hnsw":
-            s, i = self._search_hnsw(q, k + len(self.deleted))
-        else:
-            s, i = plaid_search(self._plaid, q, k=k + len(self.deleted),
-                                nprobe=self.nprobe, t_cs=self.t_cs,
-                                ndocs=self.ndocs)
-        if self.deleted:
-            keep = ~np.isin(i, np.fromiter(self.deleted, np.int64))
-            s, i = s[keep], i[keep]
-        return s[:k], i[:k]
-
-    def search_batch(self, qs: np.ndarray, k: int = 10):
-        """qs: [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -1 pads)."""
-        S = np.full((len(qs), k), -np.inf, np.float32)
-        I = np.full((len(qs), k), -1, np.int64)
-        for n, q in enumerate(np.asarray(qs)):
-            s, i = self.search(q, k)
-            S[n, :len(s)], I[n, :len(i)] = s, i
-        return S, I
-
-    def _search_flat(self, q, k):
-        d, dm = _pad_docs(self.docs, self.doc_maxlen, self.dim)
-        qm = np.ones((1, len(q)), bool)
-        s = np.asarray(maxsim_scores(jnp.asarray(q[None], jnp.float32),
-                                     jnp.asarray(qm), jnp.asarray(d),
-                                     jnp.asarray(dm)))[0]
-        order = np.argsort(-s)[:k]
-        return s[order], order.astype(np.int64)
-
-    def _search_hnsw(self, q, k):
-        """Two-stage: per-query-token ANN probe -> exact doc rerank."""
-        per_tok = max(self.hnsw_candidates // max(len(q), 1), 8)
-        cand = set()
-        for qt in np.asarray(q, np.float32):
-            _, ids = self._hnsw.search(qt, per_tok)
-            cand.update(int(self._hnsw_vec2doc[i]) for i in ids)
-        if not cand:
-            return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
-        cand = np.fromiter(cand, np.int64)
-        docs = [self.docs[i] for i in cand]
-        d, dm = _pad_docs(docs, self.doc_maxlen, self.dim)
-        qm = np.ones((1, len(q)), bool)
-        s = np.asarray(maxsim_scores(jnp.asarray(q[None], jnp.float32),
-                                     jnp.asarray(qm), jnp.asarray(d),
-                                     jnp.asarray(dm)))[0]
-        order = np.argsort(-s)[:k]
-        return s[order], cand[order]
+        S, I = self.search_batch(np.asarray(q, np.float32)[None], k=k)
+        valid = I[0] >= 0
+        return S[0][valid], I[0][valid]
 
     # ------------------------------------------------------------------ stats
     def n_vectors(self) -> int:
-        return int(sum(len(v) for i, v in enumerate(self.docs)
-                       if i not in self.deleted))
+        if self.n_docs == 0:
+            return 0
+        if self.backend == "plaid":
+            lens = np.diff(self._plaid.doc_offsets)
+            return int(lens[self._live()].sum())
+        lens = self._store.doc_lengths()
+        return int(lens[self._live()].sum())
 
     def nbytes(self) -> int:
         if self.backend == "hnsw" and self._hnsw is not None:
             return self._hnsw.nbytes()
         if self.backend == "plaid" and self._plaid is not None:
             return self._plaid.nbytes()
-        return int(sum(v.nbytes // 2 for v in self.docs))   # fp16 flat
+        # flat: fp16 store, live docs only (deleted docs are reclaimable)
+        return self._store.nbytes(bytes_per_dim=2, live_only=True)

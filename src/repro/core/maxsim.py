@@ -67,3 +67,90 @@ def maxsim_scores_blocked(q, q_mask, d, d_mask, block: int = 256,
 def topk_docs(scores, k):
     """scores [Nq, Nd] -> (top scores [Nq,k], doc ids [Nq,k])."""
     return jax.lax.top_k(scores, k)
+
+
+# ---------------------------------------------------------------------------
+# Engine entry points: Pallas kernel on TPU, jnp reference elsewhere
+# (interpret-mode Pallas on CPU is correctness-only; the jnp path keeps the
+#  batched engine fast on hosts while tracing to the same shapes).
+# ---------------------------------------------------------------------------
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# jit once at import: the kernel ref oracle IS the CPU rerank path
+from repro.kernels.maxsim.ref import maxsim_rerank_ref as _rerank_ref
+_rerank_jnp = jax.jit(_rerank_ref)
+
+
+_ALL_DOCS_BLOCK = 2048     # above this, block the corpus scan (HBM bound)
+
+
+def maxsim_all_docs(q, q_mask, d, d_mask):
+    """All-pairs scores [Nq, Nd] — flat search / shared-corpus stage.
+
+    Large corpora go through the lax.scan-blocked variant so the
+    [Nq, Nd, Lq, Ld] similarity intermediate never materializes whole.
+    """
+    if _on_tpu():
+        from repro.kernels.maxsim.ops import maxsim as maxsim_kernel
+        return maxsim_kernel(q, q_mask, d, d_mask)
+    Nd = d.shape[0]
+    if Nd <= _ALL_DOCS_BLOCK:
+        return maxsim_scores(q, q_mask, d, d_mask)
+    pad = (-Nd) % _ALL_DOCS_BLOCK
+    if pad:
+        d = jnp.pad(d, ((0, pad), (0, 0), (0, 0)))
+        d_mask = jnp.pad(d_mask, ((0, pad), (0, 0)))
+    out = maxsim_scores_blocked(q, q_mask, d, d_mask,
+                                block=_ALL_DOCS_BLOCK)
+    return out[:, :Nd]
+
+
+def topk_with_pads(scores, cand, k: int):
+    """Shared top-k epilogue for every batched search API.
+
+    scores: [Nq, C] (-inf marks invalid slots); cand: [Nq, C] doc ids or
+    None when scores are corpus-wide (ids = column index). Returns
+    (scores [Nq, k] f32, ids [Nq, k] i64) padded with -inf/-1.
+    """
+    import numpy as np
+    kk = min(k, scores.shape[1])
+    top_s, top_i = jax.lax.top_k(scores, kk)
+    top_s, top_i = np.asarray(top_s), np.asarray(top_i)
+    ids = (top_i.astype(np.int64) if cand is None
+           else np.take_along_axis(np.asarray(cand, np.int64), top_i,
+                                   axis=1))
+    ids = np.where(np.isfinite(top_s), ids, -1)
+    if kk < k:
+        top_s = np.pad(top_s, ((0, 0), (0, k - kk)),
+                       constant_values=-np.inf)
+        ids = np.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return top_s.astype(np.float32), ids.astype(np.int64)
+
+
+def maxsim_rerank(q, q_mask, d, d_mask):
+    """Per-query gathered-candidate scores [Nq, S] (one traced batch)."""
+    if _on_tpu():
+        from repro.kernels.maxsim.ops import maxsim_rerank as rerank_kernel
+        return rerank_kernel(q, q_mask, d, d_mask)
+    return _rerank_jnp(q, q_mask, d, d_mask)
+
+
+def maxsim_rerank_store(store, q, q_mask, cand, cand_mask, *,
+                        slab: int = 1024):
+    """Gather candidates from ``store`` and rerank, slabbed over the
+    candidate axis so the [Nq, slab, Ld, dim] gather stays bounded
+    (paper-default ndocs=8192 would otherwise materialize tens of GB).
+    cand/cand_mask: [Nq, C] host arrays -> scores [Nq, C] (-inf invalid).
+    """
+    import numpy as np
+    q = jnp.asarray(q, jnp.float32)
+    parts = []
+    for lo in range(0, cand.shape[1], slab):
+        c = cand[:, lo:lo + slab]
+        cm = jnp.asarray(np.asarray(cand_mask)[:, lo:lo + slab])
+        d, dm = store.gather(c)
+        s = maxsim_rerank(q, q_mask, d, dm & cm[:, :, None])
+        parts.append(jnp.where(cm, s, -jnp.inf))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)

@@ -1,37 +1,49 @@
 """PLAID-style staged late-interaction search (Santhanam et al., 2022).
 
 The index the paper composes token pooling with ("2-bit quantization and
-PLAID indexing ... with the original codebase", §3.1). Four stages:
+PLAID indexing ... with the original codebase", §3.1). Four stages, all
+batched over the whole query batch:
 
-  1. **Centroid probe** — query tokens score all K centroids (one matmul);
-     top-``nprobe`` centroid ids per query token are the probe set.
-  2. **Candidate generation** — inverted-list gather of the vectors owned by
-     probed centroids -> candidate documents.
-  3. **Approximate scoring** — per candidate doc, MaxSim over its *centroid
-     ids only* (no decompression), with centroid scores below ``t_cs``
-     pruned to 0. Top-``ndocs`` docs survive.
-  4. **Decompress + exact MaxSim** — survivors' residual codes are unpacked,
-     reconstructed and scored exactly; final ranking returned.
+  1. **Centroid probe** — every query token of every query scores all K
+     centroids in ONE einsum; top-``nprobe`` centroid ids per token form
+     the probe set.
+  2. **Candidate generation** — vectorized inverted-list gather of the
+     vectors owned by probed centroids -> per-query candidate documents
+     (host numpy, no per-query Python loop: one repeat/unique sweep over
+     the whole batch).
+  3. **Approximate scoring** — per candidate doc, MaxSim over its
+     *centroid ids only* (no decompression), centroid scores below
+     ``t_cs`` pruned to 0; a jit-compiled scan over candidate blocks.
+     Top-``ndocs`` docs per query survive.
+  4. **Exact rerank** — survivors are gathered from the device-resident
+     reconstruction ``DocStore`` (decoded once at add time) and scored
+     in one fixed-shape ``maxsim_rerank`` batch.
 
 Query hyperparameters default to the best PLAID reproduction-study settings
 the paper uses (Appendix A): nprobe=8, t_cs=0.3, ndocs=8192.
 
-Device/host split: matmul-shaped stages (1, 3, 4) are jnp; list bookkeeping
-(2) is host numpy. Documents are padded to a fixed token budget so stage 4
-is a single fixed-shape MaxSim batch (TPU-friendly; see kernels/maxsim).
+Device/host split: matmul-shaped stages (1, 3, 4) are jit'd jnp/Pallas;
+list bookkeeping (2) is vectorized host numpy. Fixed shapes throughout:
+candidate sets are padded to a block multiple so stage 3/4 trace once per
+(batch size, candidate budget) pair.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import functools
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ivf import InvertedLists, assign_vectors, build_inverted_lists
-from repro.core.maxsim import maxsim_scores
+from repro.core.docstore import (DocStore, pad_candidate_sets,
+                                 ragged_arange)
+from repro.core.ivf import InvertedLists, build_inverted_lists
+from repro.core.maxsim import maxsim_rerank_store, topk_with_pads
 from repro.core.quantization import ResidualCodec, decode, encode
+
+_CAND_BLOCK = 32       # candidate-axis padding granularity (jit shape reuse)
 
 
 @dataclass
@@ -43,6 +55,8 @@ class PLAIDIndex:
     vec2doc: np.ndarray          # [n_vectors] int64 doc id
     doc_offsets: np.ndarray      # [n_docs + 1] int64 into vector arrays
     doc_maxlen: int
+    recon: Optional[DocStore] = None   # decoded vectors, device-resident
+    _codes_padded: Optional[Tuple] = field(default=None, repr=False)
 
     @property
     def n_docs(self) -> int:
@@ -53,20 +67,74 @@ class PLAIDIndex:
         return len(self.vec2doc)
 
     def nbytes(self) -> int:
-        """Compressed store: ids (4B) + packed codes + IVF/doc offsets."""
+        """Compressed store: ids (4B) + packed codes + IVF/doc offsets.
+
+        The reconstruction DocStore is a query-time cache, not part of
+        the persisted footprint (it is re-derivable from the codes).
+        """
         return (self.assignments.nbytes + self.codes.nbytes
                 + self.ivf.ids.nbytes + self.ivf.offsets.nbytes
                 + self.vec2doc.nbytes + self.doc_offsets.nbytes
                 + np.asarray(self.codec.centroids).nbytes)
 
+    # --------------------------------------------------------- cached views
+    def _decode_docs(self, assignments, codes, lens):
+        """Decode per-doc vector lists from flat code rows."""
+        if len(assignments) == 0:
+            return [np.zeros((0, self.codec.dim), np.float32)
+                    for _ in range(len(lens))]
+        rec = np.asarray(decode(self.codec, jnp.asarray(assignments),
+                                jnp.asarray(codes)))
+        bounds = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=bounds[1:])
+        return [rec[bounds[i]:bounds[i + 1]] for i in range(len(lens))]
+
+    def recon_store(self) -> DocStore:
+        """Device-resident store of the decoded (reconstructed) vectors."""
+        if self.recon is None:
+            self.recon = DocStore(self.codec.dim, self.doc_maxlen)
+            self.recon.add(self._decode_docs(self.assignments, self.codes,
+                                             np.diff(self.doc_offsets)))
+        return self.recon
+
+    def padded_codes(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Cached [n_docs, doc_maxlen] int32 centroid-id view + mask."""
+        if self._codes_padded is None:
+            n, L = self.n_docs, self.doc_maxlen
+            out = np.zeros((max(n, 1), L), np.int32)
+            mask = np.zeros((max(n, 1), L), bool)
+            if n and self.n_vectors:
+                lens = np.diff(self.doc_offsets)
+                kept = np.minimum(lens, L)
+                rows = np.repeat(np.arange(n), kept)
+                cols = ragged_arange(kept)
+                src = np.repeat(self.doc_offsets[:-1], kept) + cols
+                out[rows, cols] = self.assignments[src]
+                mask[rows, cols] = True
+            self._codes_padded = (jnp.asarray(out), jnp.asarray(mask))
+        return self._codes_padded
+
+    def _invalidate(self):
+        self._codes_padded = None
+
     # ------------------------------------------------------------------ CRUD
     def add(self, doc_vectors: list) -> np.ndarray:
         """Append documents (list of [n_i, dim] arrays). Returns new doc ids."""
         new_ids = np.arange(self.n_docs, self.n_docs + len(doc_vectors))
-        flat = np.concatenate([np.asarray(v, np.float32) for v in doc_vectors])
-        a, w = encode(self.codec, jnp.asarray(flat))
-        a, w = np.asarray(a), np.asarray(w)
+        if len(doc_vectors) == 0:
+            return new_ids
+        dim = self.codec.dim
+        flat = np.concatenate(
+            [np.asarray(v, np.float32).reshape(-1, dim)
+             for v in doc_vectors])
         lens = np.array([len(v) for v in doc_vectors], np.int64)
+        if len(flat):
+            a, w = encode(self.codec, jnp.asarray(flat))
+            a, w = np.asarray(a), np.asarray(w)
+        else:
+            a = np.zeros((0,), self.assignments.dtype)
+            w = np.zeros((0, self.codes.shape[1]), self.codes.dtype)
+        self.recon_store().add(self._decode_docs(a, w, lens))
         self.assignments = np.concatenate([self.assignments, a])
         self.codes = np.concatenate([self.codes, w])
         self.vec2doc = np.concatenate(
@@ -75,13 +143,12 @@ class PLAIDIndex:
             [self.doc_offsets, self.doc_offsets[-1] + np.cumsum(lens)])
         self.ivf = build_inverted_lists(self.assignments,
                                         self.codec.n_centroids)
+        self._invalidate()
         return new_ids
 
     def delete(self, doc_ids) -> None:
         """Remove documents (compacting rebuild of the flat arrays)."""
-        drop = np.isin(self.vec2doc, np.asarray(doc_ids))
-        keep = ~drop
-        # remap doc ids to stay dense
+        keep = ~np.isin(self.vec2doc, np.asarray(doc_ids))
         lens = np.diff(self.doc_offsets)
         doc_keep = ~np.isin(np.arange(self.n_docs), np.asarray(doc_ids))
         self.assignments = self.assignments[keep]
@@ -92,16 +159,23 @@ class PLAIDIndex:
         self.vec2doc = np.repeat(np.arange(len(new_lens)), new_lens)
         self.ivf = build_inverted_lists(self.assignments,
                                         self.codec.n_centroids)
+        self.recon = None            # rebuilt lazily from compacted codes
+        self._invalidate()
 
 
 def build_plaid_index(doc_vectors: list, codec: ResidualCodec,
                       doc_maxlen: int = 256) -> PLAIDIndex:
     """doc_vectors: list of [n_i, dim] float arrays (already pooled)."""
     lens = np.array([len(v) for v in doc_vectors], np.int64)
-    flat = (np.concatenate([np.asarray(v, np.float32) for v in doc_vectors])
-            if doc_vectors else np.zeros((0, codec.dim), np.float32))
-    a, w = encode(codec, jnp.asarray(flat))
-    a, w = np.asarray(a), np.asarray(w)
+    flat = (np.concatenate([np.asarray(v, np.float32).reshape(-1, codec.dim)
+                            for v in doc_vectors])
+            if len(doc_vectors) else np.zeros((0, codec.dim), np.float32))
+    if len(flat):
+        a, w = encode(codec, jnp.asarray(flat))
+        a, w = np.asarray(a), np.asarray(w)
+    else:
+        a = np.zeros((0,), np.int32)
+        w = np.zeros((0, max(codec.dim * codec.bits // 32, 1)), np.uint32)
     doc_offsets = np.zeros(len(lens) + 1, np.int64)
     np.cumsum(lens, out=doc_offsets[1:])
     return PLAIDIndex(
@@ -116,79 +190,140 @@ def build_plaid_index(doc_vectors: list, codec: ResidualCodec,
 
 
 # ---------------------------------------------------------------------------
-# Search stages
+# Batched search stages
 # ---------------------------------------------------------------------------
-def _centroid_scores(index: PLAIDIndex, q: np.ndarray) -> np.ndarray:
-    """Stage 1: q [Lq, dim] -> centroid scores [Lq, K]."""
-    return np.asarray(jnp.asarray(q, jnp.float32)
-                      @ jnp.asarray(index.codec.centroids).T)
+def _pad_up(n: int, mult: int) -> int:
+    return max(((n + mult - 1) // mult) * mult, mult)
 
 
-def _approx_doc_scores(index: PLAIDIndex, cs: np.ndarray,
-                       cand_docs: np.ndarray, t_cs: float) -> np.ndarray:
-    """Stage 3: centroid-only MaxSim per candidate doc.
+@jax.jit
+def _centroid_scores_batch(qs, centroids):
+    """Stage 1: qs [Nq, Lq, dim] -> centroid scores [Nq, Lq, K]."""
+    return jnp.einsum("qld,kd->qlk", qs.astype(jnp.float32),
+                      centroids.astype(jnp.float32))
 
-    cs: [Lq, K] centroid scores; cand_docs: [C] doc ids.
-    score(doc) = sum_q max over doc's centroid ids of pruned cs[q, c].
+
+def _gather_candidates(index: PLAIDIndex, probe: np.ndarray,
+                       live: Optional[np.ndarray] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 2: probe [Nq, Lq, nprobe] centroid ids -> padded candidate
+    doc ids [Nq, C] + validity mask [Nq, C]. Fully vectorized."""
+    Nq = probe.shape[0]
+    K = index.ivf.n_centroids
+    flat = probe.reshape(Nq, -1).astype(np.int64)
+    # dedupe (query, centroid) pairs so each probed list is walked once
+    qc = np.unique(np.arange(Nq)[:, None] * K + flat)
+    qi, ci = qc // K, qc % K
+    starts = index.ivf.offsets[ci]
+    lens = index.ivf.offsets[ci + 1] - starts
+    total = int(lens.sum())
+    if total == 0:
+        return (np.zeros((Nq, 1), np.int64), np.zeros((Nq, 1), bool))
+    # flat positions into ivf.ids for every (pair, member) without a loop
+    pos = np.repeat(starts, lens) + ragged_arange(lens)
+    docs = index.vec2doc[index.ivf.ids[pos]]
+    qidx = np.repeat(qi, lens)
+    # dedupe (query, doc) pairs -> per-query candidate sets
+    qd = np.unique(qidx * np.int64(index.n_docs) + docs)
+    qidx, docs = qd // index.n_docs, qd % index.n_docs
+    if live is not None:
+        keep = live[docs]
+        qidx, docs = qidx[keep], docs[keep]
+    return pad_candidate_sets(qidx, docs, Nq, block=_CAND_BLOCK)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _approx_scores_batch(cs, codes, code_mask, cand_mask, t_cs,
+                         block: int = _CAND_BLOCK):
+    """Stage 3: centroid-only MaxSim for every (query, candidate) pair.
+
+    cs: [Nq, Lq, K]; codes/code_mask: [Nq, C, L] per-candidate centroid
+    ids; cand_mask: [Nq, C]. Scanned over candidate blocks to bound the
+    [Nq, block, L, Lq] gather. Returns approx scores [Nq, C] (-inf on
+    padded candidate slots).
     """
-    cs_pruned = np.where(cs >= t_cs, cs, 0.0)          # [Lq, K]
-    scores = np.zeros(len(cand_docs), np.float32)
-    for i, d in enumerate(cand_docs):
-        lo, hi = index.doc_offsets[d], index.doc_offsets[d + 1]
-        cids = index.assignments[lo:hi]                # centroid ids of doc d
-        scores[i] = cs_pruned[:, cids].max(axis=1).sum()
-    return scores
+    Nq, C, L = codes.shape
+    cs_p = jnp.where(cs >= t_cs, cs, 0.0)              # [Nq, Lq, K]
+    csT = jnp.swapaxes(cs_p, 1, 2)                     # [Nq, K, Lq]
+    nb = C // block
+    codes_b = jnp.moveaxis(codes.reshape(Nq, nb, block, L), 1, 0)
+    mask_b = jnp.moveaxis(code_mask.reshape(Nq, nb, block, L), 1, 0)
+
+    def one(carry, args):
+        cb, mb = args                                  # [Nq, block, L]
+        vals = jax.vmap(lambda t, i: t[i])(csT, cb)    # [Nq, block, L, Lq]
+        vals = jnp.where(mb[..., None], vals, 0.0)
+        return carry, vals.max(axis=2).sum(axis=-1)    # [Nq, block]
+
+    _, out = jax.lax.scan(one, 0, (codes_b, mask_b))   # [nb, Nq, block]
+    approx = jnp.moveaxis(out, 0, 1).reshape(Nq, C)
+    return jnp.where(cand_mask, approx, -jnp.inf)
 
 
-def _exact_rerank(index: PLAIDIndex, q: np.ndarray,
-                  docs: np.ndarray) -> np.ndarray:
-    """Stage 4: decompress survivors, fixed-shape MaxSim batch."""
-    Lq, dim = q.shape
-    n = len(docs)
-    L = index.doc_maxlen
-    dvecs = np.zeros((n, L, dim), np.float32)
-    dmask = np.zeros((n, L), bool)
-    for i, d in enumerate(docs):
-        lo, hi = index.doc_offsets[d], index.doc_offsets[d + 1]
-        rec = np.asarray(decode(index.codec,
-                                jnp.asarray(index.assignments[lo:hi]),
-                                jnp.asarray(index.codes[lo:hi])))
-        k = min(len(rec), L)
-        dvecs[i, :k] = rec[:k]
-        dmask[i, :k] = True
-    qm = np.ones((1, Lq), bool)
-    s = maxsim_scores(jnp.asarray(q[None]), jnp.asarray(qm),
-                      jnp.asarray(dvecs), jnp.asarray(dmask))
-    return np.asarray(s)[0]                            # [n]
+def plaid_candidates(index: PLAIDIndex, qs: np.ndarray,
+                     nprobe: int = 8, t_cs: float = 0.3,
+                     ndocs: int = 8192,
+                     live: Optional[np.ndarray] = None,
+                     q_mask: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stages 1-3 for a query batch: qs [Nq, Lq, dim] -> survivor doc
+    ids [Nq, S] + validity mask [Nq, S] (S <= ndocs, block-padded).
+    Masked query tokens contribute nothing to probes or approx scores."""
+    Nq = len(qs)
+    if index.n_vectors == 0:
+        return np.zeros((Nq, 1), np.int64), np.zeros((Nq, 1), bool)
+    cs = _centroid_scores_batch(jnp.asarray(qs, jnp.float32),
+                                jnp.asarray(index.codec.centroids))
+    if q_mask is not None:
+        # masked tokens: -inf centroid scores -> pruned to 0 in stage 3,
+        # and their probe picks are degenerate duplicates (harmless)
+        cs = jnp.where(jnp.asarray(q_mask, bool)[:, :, None], cs, -jnp.inf)
+    k = min(nprobe, index.codec.n_centroids)
+    _, probe = jax.lax.top_k(cs, k)                    # [Nq, Lq, nprobe]
+    cand, cmask = _gather_candidates(index, np.asarray(probe), live)
+    if cand.shape[1] <= ndocs:
+        return cand, cmask
+    codes, tok_mask = index.padded_codes()
+    idx = jnp.asarray(cand)
+    approx = _approx_scores_batch(
+        cs, jnp.take(codes, idx, axis=0),
+        jnp.take(tok_mask, idx, axis=0) & jnp.asarray(cmask)[:, :, None],
+        jnp.asarray(cmask), t_cs)
+    keep = min(ndocs, cand.shape[1])           # honor the ndocs budget
+    top_s, top_i = jax.lax.top_k(approx, keep)
+    top_i = np.asarray(top_i)
+    cand = np.take_along_axis(cand, top_i, axis=1)
+    cmask = np.asarray(jnp.isfinite(top_s))
+    S = _pad_up(keep, _CAND_BLOCK)             # block-pad for jit reuse
+    if S > keep:
+        cand = np.pad(cand, ((0, 0), (0, S - keep)))
+        cmask = np.pad(cmask, ((0, 0), (0, S - keep)))
+    return cand, cmask
+
+
+def plaid_search_batch(index: PLAIDIndex, qs: np.ndarray, k: int = 10,
+                       nprobe: int = 8, t_cs: float = 0.3,
+                       ndocs: int = 8192
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """True batch API: qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k];
+    -inf/-1 pads). One traced rerank for the whole batch."""
+    qs = np.asarray(qs, np.float32)
+    Nq = len(qs)
+    cand, cmask = plaid_candidates(index, qs, nprobe=nprobe, t_cs=t_cs,
+                                   ndocs=ndocs)
+    if not cmask.any():
+        return (np.full((Nq, k), -np.inf, np.float32),
+                np.full((Nq, k), -1, np.int64))
+    qm = jnp.ones(qs.shape[:2], bool)
+    scores = maxsim_rerank_store(index.recon_store(), qs, qm, cand, cmask)
+    return topk_with_pads(scores, cand, k)
 
 
 def plaid_search(index: PLAIDIndex, q: np.ndarray, k: int = 10,
                  nprobe: int = 8, t_cs: float = 0.3,
                  ndocs: int = 8192) -> Tuple[np.ndarray, np.ndarray]:
     """One query: q [Lq, dim] -> (scores [<=k], doc ids [<=k]) best-first."""
-    if index.n_vectors == 0:
-        return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
-    cs = _centroid_scores(index, q)                    # [Lq, K]
-    probe = np.argsort(-cs, axis=1)[:, :nprobe]        # [Lq, nprobe]
-    cand_vecs = index.ivf.lists_for(probe.reshape(-1))
-    cand_docs = np.unique(index.vec2doc[cand_vecs])
-    if len(cand_docs) == 0:
-        return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
-    approx = _approx_doc_scores(index, cs, cand_docs, t_cs)
-    if len(cand_docs) > ndocs:
-        top = np.argsort(-approx)[:ndocs]
-        cand_docs = cand_docs[top]
-    exact = _exact_rerank(index, q, cand_docs)
-    order = np.argsort(-exact)[:k]
-    return exact[order], cand_docs[order].astype(np.int64)
-
-
-def plaid_search_batch(index: PLAIDIndex, qs: np.ndarray, k: int = 10,
-                       **kw) -> Tuple[np.ndarray, np.ndarray]:
-    """qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -1 pads)."""
-    S = np.full((len(qs), k), -np.inf, np.float32)
-    I = np.full((len(qs), k), -1, np.int64)
-    for i, q in enumerate(qs):
-        s, d = plaid_search(index, np.asarray(q), k=k, **kw)
-        S[i, :len(s)], I[i, :len(d)] = s, d
-    return S, I
+    S, I = plaid_search_batch(index, np.asarray(q, np.float32)[None], k=k,
+                              nprobe=nprobe, t_cs=t_cs, ndocs=ndocs)
+    valid = I[0] >= 0
+    return S[0][valid], I[0][valid]

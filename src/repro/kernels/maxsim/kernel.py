@@ -62,3 +62,49 @@ def maxsim_pallas(q, q_mask, d, d_mask, *, block_q: int = 8,
         out_shape=jax.ShapeDtypeStruct((Nq, Nd), jnp.float32),
         interpret=interpret,
     )(q, q_mask, d, d_mask)
+
+
+def _maxsim_rerank_kernel(q_ref, qm_ref, d_ref, dm_ref, o_ref):
+    """One query block x one slab of that query's own candidates."""
+    _, Lq, dim = q_ref.shape
+    _, BS, Ld, _ = d_ref.shape
+    q = q_ref[0].astype(jnp.float32)                 # [Lq, dim]
+    d = d_ref[0].astype(jnp.float32).reshape(BS * Ld, dim)
+    sim = jax.lax.dot_general(q, d, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    sim = sim.reshape(Lq, BS, Ld)
+    dm = dm_ref[0].reshape(1, BS, Ld)
+    sim = jnp.where(dm, sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)                     # [Lq, BS]
+    qm = qm_ref[0].reshape(Lq, 1)
+    best = jnp.where(qm & jnp.isfinite(best), best, 0.0)
+    o_ref[0] = jnp.sum(best, axis=0)                 # [BS]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def maxsim_rerank_pallas(q, q_mask, d, d_mask, *, block_s: int = 8,
+                         interpret: bool = False):
+    """Gathered-candidate rerank: q [Nq, Lq, dim]; d [Nq, S, Ld, dim]
+    -> scores [Nq, S] f32. S % block_s == 0 (wrapper pads).
+
+    Grid runs (query, candidate-slab); each program re-uses the one
+    query tile against a ``block_s``-doc slab of its candidate gather,
+    the same flatten-matmul/VREG-reduce scheme as ``_maxsim_kernel``.
+    """
+    Nq, Lq, dim = q.shape
+    _, S, Ld, _ = d.shape
+    assert S % block_s == 0, (S, block_s)
+    grid = (Nq, S // block_s)
+    return pl.pallas_call(
+        _maxsim_rerank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lq, dim), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, Lq), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_s, Ld, dim), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, Ld), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Nq, S), jnp.float32),
+        interpret=interpret,
+    )(q, q_mask, d, d_mask)

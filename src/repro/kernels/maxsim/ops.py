@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.maxsim.kernel import maxsim_pallas
+from repro.kernels.maxsim.kernel import maxsim_pallas, maxsim_rerank_pallas
 
 
 def _on_tpu() -> bool:
@@ -35,3 +35,15 @@ def maxsim(q, q_mask, d, d_mask, *, block_q: int = 8, block_d: int = 8):
     out = maxsim_pallas(q, q_mask, d, d_mask, block_q=block_q,
                         block_d=block_d, interpret=not _on_tpu())
     return out[:Nq, :Nd]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def maxsim_rerank(q, q_mask, d, d_mask, *, block_s: int = 8):
+    """Per-query candidate scores [Nq, S]: d is a per-query gather
+    [Nq, S, Ld, dim] and query i only scores slab d[i]."""
+    S = d.shape[1]
+    d = _pad_to(d, 1, block_s)
+    d_mask = _pad_to(d_mask, 1, block_s)
+    out = maxsim_rerank_pallas(q, q_mask, d, d_mask, block_s=block_s,
+                               interpret=not _on_tpu())
+    return out[:, :S]

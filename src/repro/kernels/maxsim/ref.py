@@ -17,3 +17,18 @@ def maxsim_ref(q, q_mask, d, d_mask):
     best = jnp.max(sim, axis=-1)
     best = jnp.where(q_mask[:, None, :] & jnp.isfinite(best), best, 0.0)
     return jnp.sum(best, axis=-1)
+
+
+def maxsim_rerank_ref(q, q_mask, d, d_mask):
+    """Per-query candidate rerank: each query scores only its own docs.
+
+    q: [Nq, Lq, dim]; d: [Nq, S, Ld, dim]; masks True=valid.
+    Returns scores [Nq, S] f32.
+    """
+    qf = q.astype(jnp.float32)
+    df = d.astype(jnp.float32)
+    sim = jnp.einsum("qld,qskd->qslk", qf, df)
+    sim = jnp.where(d_mask[:, :, None, :], sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)                       # [Nq, S, Lq]
+    best = jnp.where(q_mask[:, None, :] & jnp.isfinite(best), best, 0.0)
+    return jnp.sum(best, axis=-1)                      # [Nq, S]

@@ -7,7 +7,7 @@ excellent *candidate generator*, and a mild pool (f=1..2) an excellent
 *reranker*. The cascade stores both:
 
   stage 1: MaxSim over the COARSE vectors for every doc (4-8x cheaper
-           than unpooled full scan) -> top-C candidates
+           than unpooled full scan) -> top-C candidates per query
   stage 2: exact MaxSim over the FINE vectors of the C candidates only.
 
 Total vector budget: n/f_coarse + n/f_fine vs n for the unpooled index —
@@ -15,17 +15,24 @@ e.g. f=(6,2) stores 67% of the vectors but scans only ~17% per query at
 full-corpus stage-1. Quality approaches the fine index (measured in
 benchmarks/cascade_bench.py); this is the paper's own intuition applied
 twice, composed with none of its machinery changed.
+
+Both stages run on the batched two-stage engine: each pool level lives
+in a device-resident ``DocStore`` and the whole query batch goes through
+one all-pairs stage-1 matmul and one gathered stage-2 rerank — no
+per-query Python loop.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import List, Tuple
 
-import numpy as np
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.index import _pad_docs
-from repro.core.maxsim import maxsim_scores
+from repro.core.docstore import DocStore
+from repro.core.maxsim import (maxsim_all_docs, maxsim_rerank,
+                               topk_with_pads)
 
 
 @dataclass
@@ -37,59 +44,59 @@ class CascadeIndex:
     doc_maxlen: int = 256
 
     def __post_init__(self):
-        self.coarse_docs: List[np.ndarray] = []
-        self.fine_docs: List[np.ndarray] = []
-        self._coarse = None    # padded [N, Lc, dim]
-        self._fine = None
+        self._coarse = DocStore(self.dim, self.doc_maxlen)
+        self._fine = DocStore(self.dim, self.doc_maxlen)
+
+    # compat views over the stores
+    @property
+    def coarse_docs(self) -> List[np.ndarray]:
+        return self._coarse.docs_list()
+
+    @property
+    def fine_docs(self) -> List[np.ndarray]:
+        return self._fine.docs_list()
 
     def add(self, coarse: List[np.ndarray], fine: List[np.ndarray]):
         assert len(coarse) == len(fine)
-        self.coarse_docs.extend(coarse)
-        self.fine_docs.extend(fine)
-        self._coarse = self._fine = None
-        return np.arange(len(self.coarse_docs) - len(coarse),
-                         len(self.coarse_docs))
+        ids = self._coarse.add(coarse)
+        self._fine.add(fine)
+        return ids
 
-    def _ensure_padded(self):
-        if self._coarse is None:
-            lc = max(max((len(d) for d in self.coarse_docs), default=1), 1)
-            lf = max(max((len(d) for d in self.fine_docs), default=1), 1)
-            self._coarse = _pad_docs(self.coarse_docs, lc, self.dim)
-            self._fine = _pad_docs(self.fine_docs, lf, self.dim)
+    def search_batch(self, qs: np.ndarray, k: int = 10
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -inf/-1 pads)."""
+        qs = jnp.asarray(np.asarray(qs, np.float32))
+        Nq = qs.shape[0]
+        n = self._coarse.n_docs
+        if n == 0:
+            return (np.full((Nq, k), -np.inf, np.float32),
+                    np.full((Nq, k), -1, np.int64))
+        qm = jnp.ones(qs.shape[:2], bool)
+        # stage 1: one all-pairs matmul over the coarse corpus view
+        cd, cm = self._coarse.padded()
+        s1 = maxsim_all_docs(qs, qm, cd, cm)               # [Nq, n]
+        C = min(max(self.candidates, k), n)
+        _, cand = jax.lax.top_k(s1, C)                     # [Nq, C]
+        cand = np.asarray(cand, np.int64)
+        # stage 2: gathered exact rerank over the fine vectors
+        fd, fm = self._fine.gather(cand)
+        s2 = maxsim_rerank(qs, qm, fd, fm)                 # [Nq, C]
+        return topk_with_pads(s2, cand, k)
 
     def search(self, q: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray]:
-        """q [Lq, dim] -> (scores [k], ids [k])."""
-        self._ensure_padded()
-        cd, cm = self._coarse
-        qm = np.ones((1, len(q)), bool)
-        s1 = np.asarray(maxsim_scores(jnp.asarray(q[None], jnp.float32),
-                                      jnp.asarray(qm), jnp.asarray(cd),
-                                      jnp.asarray(cm)))[0]
-        cand = np.argsort(-s1)[:max(self.candidates, k)]
-        fd, fm = self._fine
-        s2 = np.asarray(maxsim_scores(jnp.asarray(q[None], jnp.float32),
-                                      jnp.asarray(qm),
-                                      jnp.asarray(fd[cand]),
-                                      jnp.asarray(fm[cand])))[0]
-        order = np.argsort(-s2)[:k]
-        return s2[order], cand[order].astype(np.int64)
-
-    def search_batch(self, qs: np.ndarray, k: int = 10):
-        S = np.zeros((len(qs), k), np.float32)
-        I = np.zeros((len(qs), k), np.int64)
-        for n, q in enumerate(np.asarray(qs)):
-            s, i = self.search(q, k)
-            S[n, :len(s)], I[n, :len(i)] = s, i
-        return S, I
+        """q [Lq, dim] -> (scores [<=k], ids [<=k])."""
+        S, I = self.search_batch(np.asarray(q, np.float32)[None], k=k)
+        valid = I[0] >= 0
+        return S[0][valid], I[0][valid]
 
     def n_vectors(self) -> int:
-        return int(sum(len(d) for d in self.coarse_docs)
-                   + sum(len(d) for d in self.fine_docs))
+        return (self._coarse.n_vectors(live_only=False)
+                + self._fine.n_vectors(live_only=False))
 
     def stage1_vectors(self) -> int:
         """Vectors touched by a full stage-1 scan (the per-query cost)."""
-        return int(sum(len(d) for d in self.coarse_docs))
+        return self._coarse.n_vectors(live_only=False)
 
 
 def build_cascade(indexer_params, cfg, doc_tokens: np.ndarray,

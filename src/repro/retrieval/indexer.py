@@ -58,6 +58,8 @@ class Indexer:
         """doc_tokens [N, L] -> list of per-doc pooled vector arrays."""
         out: List[np.ndarray] = []
         N = doc_tokens.shape[0]
+        if N == 0:
+            return out
         B = self.encode_batch
         for lo in range(0, N, B):
             chunk = doc_tokens[lo:lo + B]
@@ -76,17 +78,19 @@ class Indexer:
         """Returns (MultiVectorIndex, IndexStats)."""
         doc_vecs = self.encode_and_pool(doc_tokens)
         raw = self._raw_vector_count(doc_tokens)
-        index = MultiVectorIndex(dim=self.cfg.proj_dim, backend=self.backend,
-                                 doc_maxlen=self.cfg.doc_maxlen,
-                                 n_centroids=self.cfg.n_centroids,
-                                 quant_bits=self.cfg.quant_bits,
-                                 nprobe=self.cfg.nprobe, t_cs=self.cfg.t_cs,
-                                 ndocs=self.cfg.ndocs, **self.index_kw)
+        kw = dict(doc_maxlen=self.cfg.doc_maxlen,
+                  n_centroids=self.cfg.n_centroids,
+                  quant_bits=self.cfg.quant_bits,
+                  nprobe=self.cfg.nprobe, t_cs=self.cfg.t_cs,
+                  ndocs=self.cfg.ndocs)
+        kw.update(self.index_kw)        # explicit kwargs override config
+        index = MultiVectorIndex(dim=self.cfg.proj_dim,
+                                 backend=self.backend, **kw)
         index.add(doc_vecs)
         stats = IndexStats(
-            n_docs=len(doc_vecs),
+            n_docs=index.n_docs,
             n_vectors_raw=raw,
-            n_vectors_stored=int(sum(len(v) for v in doc_vecs)),
+            n_vectors_stored=index.n_vectors(),
             index_bytes=index.nbytes(),
         )
         return index, stats

@@ -2,6 +2,12 @@
 
 Query-time is UNCHANGED by token pooling (the paper's key deployment
 property): the searcher is identical for pooled and unpooled indexes.
+
+``search``/``search_batch`` are true batch APIs: the whole query batch
+is encoded in device batches and handed to the index's two-stage engine
+in one call (one traced rerank per microbatch, no per-query loop).
+``warmup`` triggers jit compilation at a given batch size so serving
+latency percentiles exclude compile time.
 """
 from __future__ import annotations
 
@@ -41,10 +47,23 @@ class Searcher:
     def search(self, query_tokens: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray]:
         """[Nq, L] raw token ids -> (scores [Nq, k], doc ids [Nq, k])."""
-        qv = self.encode(query_tokens)
-        return self.index.search_batch(qv, k=k)
+        return self.search_encoded(self.encode(query_tokens), k=k)
+
+    def search_encoded(self, query_vectors: np.ndarray, k: int = 10
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pre-encoded [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k])."""
+        return self.index.search_batch(query_vectors, k=k)
+
+    # alias: a Searcher search is always batched
+    search_batch = search
 
     def rankings(self, query_tokens: np.ndarray, k: int = 10
                  ) -> List[List[int]]:
         _, ids = self.search(query_tokens, k)
         return [[int(d) for d in row if d >= 0] for row in ids]
+
+    def warmup(self, batch_size: int, k: int = 10) -> None:
+        """Trace/compile the encode + two-stage pipeline for one shape."""
+        L = self.cfg.query_maxlen - 2
+        toks = np.ones((batch_size, L), np.int32)
+        self.search(toks, k=k)

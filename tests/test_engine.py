@@ -1,0 +1,222 @@
+"""Batched two-stage engine: DocStore, batch==sequential parity, CRUD
+edge cases, and the gathered-candidate rerank path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.docstore import DocStore, pad_candidate_sets
+from repro.core.index import MultiVectorIndex
+
+BACKENDS = ["flat", "hnsw", "plaid"]
+
+
+def unit_docs(rng, n=40, dim=16, lo=4, hi=20):
+    docs = []
+    for _ in range(n):
+        v = rng.normal(size=(rng.integers(lo, hi), dim)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    return docs
+
+
+def unit_queries(rng, n, lq=5, dim=16):
+    q = rng.normal(size=(n, lq, dim)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def make_index(backend, dim=16):
+    return MultiVectorIndex(dim=dim, backend=backend, doc_maxlen=24,
+                            n_centroids=16, ndocs=64)
+
+
+# ------------------------------------------------------------------ DocStore
+def test_docstore_add_grow_padded():
+    rng = np.random.default_rng(0)
+    store = DocStore(dim=8, doc_maxlen=6, init_capacity=4)
+    docs = unit_docs(rng, n=10, dim=8, lo=2, hi=9)
+    ids = store.add(docs[:4])
+    assert list(ids) == [0, 1, 2, 3]
+    d, m = store.padded()
+    assert d.shape[0] == 4 and d.shape[1] <= 6 and d.shape[2] == 8
+    ids2 = store.add(docs[4:])          # forces amortized doubling
+    assert list(ids2) == list(range(4, 10))
+    d, m = store.padded()
+    # width is tight: min(doc_maxlen, longest doc)
+    expect_L = min(6, max(len(x) for x in docs))
+    assert d.shape == (10, expect_L, 8)
+    for i, doc in enumerate(docs):
+        k = min(len(doc), 6)
+        np.testing.assert_allclose(np.asarray(d[i, :k]), doc[:k], rtol=1e-6)
+        assert int(np.asarray(m[i]).sum()) == k
+        np.testing.assert_allclose(store.doc(i), doc, rtol=1e-6)
+
+
+def test_docstore_delete_and_nbytes():
+    store = DocStore(dim=4, doc_maxlen=8)
+    store.add([np.ones((3, 4), np.float32), np.ones((5, 4), np.float32)])
+    assert store.n_vectors() == 8
+    store.delete([0])
+    assert store.n_vectors() == 5
+    assert store.nbytes(bytes_per_dim=2) == 5 * 4 * 2
+    assert store.n_vectors(live_only=False) == 8
+
+
+def test_docstore_empty_add():
+    store = DocStore(dim=4, doc_maxlen=8)
+    assert len(store.add([])) == 0
+    assert store.n_docs == 0
+
+
+def test_pad_candidate_sets():
+    qidx = np.array([0, 0, 0, 2, 2])
+    docs = np.array([5, 7, 9, 1, 3])
+    cand, mask = pad_candidate_sets(qidx, docs, 3, block=4)
+    assert cand.shape == (3, 4)
+    assert list(cand[0][mask[0]]) == [5, 7, 9]
+    assert not mask[1].any()
+    assert list(cand[2][mask[2]]) == [1, 3]
+
+
+# ----------------------------------------------------------- CRUD satellites
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_add_is_noop(backend):
+    idx = make_index(backend)
+    ids = idx.add([])                    # must not crash on any backend
+    assert ids.shape == (0,)
+    rng = np.random.default_rng(1)
+    idx.add(unit_docs(rng))
+    assert len(idx.add([])) == 0
+    s, i = idx.search(unit_queries(rng, 1)[0], k=3)
+    assert len(i) == 3
+
+
+def test_flat_nbytes_excludes_deleted():
+    idx = MultiVectorIndex(dim=8, backend="flat", doc_maxlen=16)
+    idx.add([np.ones((4, 8), np.float32), np.ones((6, 8), np.float32)])
+    assert idx.nbytes() == 10 * 8 * 2    # fp16 flat
+    idx.delete([0])
+    assert idx.nbytes() == 6 * 8 * 2     # deleted doc no longer counted
+    assert idx.n_vectors() == 6
+
+
+# ------------------------------------------------------ batch == sequential
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_search_batch_matches_sequential(backend):
+    rng = np.random.default_rng(2)
+    idx = make_index(backend)
+    idx.add(unit_docs(rng, n=50))
+    qs = unit_queries(rng, 32)
+    S, I = idx.search_batch(qs, k=8)
+    assert S.shape == (32, 8) and I.shape == (32, 8)
+    for n in range(32):
+        s, i = idx.search(qs[n], k=8)
+        valid = I[n] >= 0
+        assert np.array_equal(I[n][valid], i), (backend, n)
+        np.testing.assert_allclose(S[n][valid], s, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_delete_then_search_parity(backend):
+    """Deleted ids never come back; survivor scores are unchanged."""
+    rng = np.random.default_rng(3)
+    idx = make_index(backend)
+    idx.add(unit_docs(rng, n=50))
+    qs = unit_queries(rng, 6)
+    S0, I0 = idx.search_batch(qs, k=10)
+    drop = {int(I0[0][0]), int(I0[1][0]), 5, 11}
+    idx.delete(sorted(drop))
+    S1, I1 = idx.search_batch(qs, k=10)
+    assert not np.isin(I1[I1 >= 0], sorted(drop)).any()
+    # survivors keep their exact-rerank scores
+    for n in range(len(qs)):
+        before = {int(d): float(s) for s, d in zip(S0[n], I0[n]) if d >= 0}
+        for s, d in zip(S1[n], I1[n]):
+            if d >= 0 and int(d) in before:
+                np.testing.assert_allclose(s, before[int(d)],
+                                           rtol=1e-5, atol=1e-5)
+
+
+def test_plaid_prune_path_parity_and_recall():
+    """Force stage-3 centroid-only pruning (ndocs < candidate count):
+    batch==single parity must hold and easy queries must survive the
+    prune (agreement with flat exact search on top-1)."""
+    rng = np.random.default_rng(7)
+    topics = rng.normal(size=(4, 16)).astype(np.float32)
+    docs = []
+    for i in range(60):
+        v = topics[i % 4] + 0.3 * rng.normal(size=(rng.integers(6, 20), 16))
+        docs.append((v / np.linalg.norm(v, axis=-1, keepdims=True))
+                    .astype(np.float32))
+    plaid = MultiVectorIndex(dim=16, backend="plaid", doc_maxlen=24,
+                             n_centroids=32, quant_bits=4, ndocs=16)
+    flat = MultiVectorIndex(dim=16, backend="flat", doc_maxlen=24)
+    plaid.add(docs)
+    flat.add(docs)
+    qs = np.stack([docs[d][:6] for d in (3, 17, 42)])
+    S, I = plaid.search_batch(qs, k=5)
+    hits = 0
+    for n, d in enumerate((3, 17, 42)):
+        s, i = plaid.search(qs[n], k=5)
+        valid = I[n] >= 0
+        assert np.array_equal(I[n][valid], i)
+        np.testing.assert_allclose(S[n][valid], s, rtol=1e-5)
+        _, i_flat = flat.search(qs[n], k=5)
+        hits += int(i_flat[0] in list(I[n][:3]))
+    assert hits >= 2
+
+
+def test_plaid_standalone_batch_matches_single():
+    from repro.core.ivf import train_centroids
+    from repro.core.plaid import (build_plaid_index, plaid_search,
+                                  plaid_search_batch)
+    from repro.core.quantization import train_codec
+    rng = np.random.default_rng(4)
+    docs = unit_docs(rng, n=40)
+    flat = np.concatenate(docs)
+    cents = train_centroids(flat, 16)
+    codec = train_codec(jnp.asarray(flat), cents, bits=4)
+    index = build_plaid_index(docs, codec, doc_maxlen=24)
+    qs = unit_queries(rng, 8)
+    S, I = plaid_search_batch(index, qs, k=5, ndocs=64)
+    for n in range(8):
+        s, i = plaid_search(index, qs[n], k=5, ndocs=64)
+        valid = I[n] >= 0
+        assert np.array_equal(I[n][valid], i)
+        np.testing.assert_allclose(S[n][valid], s, rtol=1e-5)
+
+
+def test_cascade_batch_matches_single():
+    from repro.retrieval.cascade import CascadeIndex
+    rng = np.random.default_rng(5)
+    idx = CascadeIndex(dim=16, candidates=12, doc_maxlen=24)
+    idx.add(unit_docs(rng, n=30, lo=2, hi=6), unit_docs(rng, n=30))
+    qs = unit_queries(rng, 9)
+    S, I = idx.search_batch(qs, k=6)
+    for n in range(9):
+        s, i = idx.search(qs[n], k=6)
+        valid = I[n] >= 0
+        assert np.array_equal(I[n][valid], i)
+        np.testing.assert_allclose(S[n][valid], s, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_q_mask_excludes_tokens_everywhere(backend):
+    """Masked query tokens must not influence ANY stage — candidate
+    probing and approx pruning included, not just the exact rerank."""
+    rng = np.random.default_rng(11)
+    idx = make_index(backend)
+    idx.add(unit_docs(rng))
+    qs = unit_queries(rng, 4)
+    S0, I0 = idx.search_batch(qs, k=5)
+    garbage = 100 * rng.normal(size=(4, 2, 16)).astype(np.float32)
+    qs2 = np.concatenate([qs, garbage], axis=1)
+    qmask = np.concatenate([np.ones((4, qs.shape[1]), bool),
+                            np.zeros((4, 2), bool)], axis=1)
+    S1, I1 = idx.search_batch(qs2, k=5, q_mask=qmask)
+    assert np.array_equal(I0, I1), backend
+    np.testing.assert_allclose(S0, S1, rtol=1e-4, atol=1e-4)
+
+
+def test_empty_index_search():
+    idx = MultiVectorIndex(dim=16, backend="flat", doc_maxlen=24)
+    S, I = idx.search_batch(np.zeros((3, 4, 16), np.float32), k=5)
+    assert (I == -1).all() and np.isneginf(S).all()

@@ -9,8 +9,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.kmeans_assign.ops import kmeans_assign
 from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
-from repro.kernels.maxsim.ops import maxsim
-from repro.kernels.maxsim.ref import maxsim_ref
+from repro.kernels.maxsim.ops import maxsim, maxsim_rerank
+from repro.kernels.maxsim.ref import maxsim_ref, maxsim_rerank_ref
 from repro.kernels.quant.ops import dequant_score
 from repro.kernels.quant.ref import dequant_score_ref
 
@@ -33,6 +33,23 @@ def test_maxsim_sweep(nq, lq, nd, ld, dim, dtype):
     dm = jnp.asarray(rng.random((nd, ld)) > 0.2)
     out = maxsim(q, qm, d, dm, block_q=4, block_d=4)
     ref = maxsim_ref(q, qm, d, dm)
+    np.testing.assert_allclose(out, ref, rtol=tol(dtype), atol=tol(dtype)
+                               * np.abs(np.asarray(ref)).max())
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nq,lq,s,ld,dim", [
+    (3, 32, 9, 64, 128), (8, 16, 5, 128, 64), (1, 8, 1, 32, 128),
+])
+def test_maxsim_rerank_sweep(nq, lq, s, ld, dim, dtype):
+    """Gathered-candidate rerank: query i scores only its own slab d[i]."""
+    rng = np.random.default_rng(nq * ld + s)
+    q = jnp.asarray(rng.normal(size=(nq, lq, dim)), dtype)
+    d = jnp.asarray(rng.normal(size=(nq, s, ld, dim)), dtype)
+    qm = jnp.asarray(rng.random((nq, lq)) > 0.2)
+    dm = jnp.asarray(rng.random((nq, s, ld)) > 0.2)
+    out = maxsim_rerank(q, qm, d, dm, block_s=4)
+    ref = maxsim_rerank_ref(q, qm, d, dm)
     np.testing.assert_allclose(out, ref, rtol=tol(dtype), atol=tol(dtype)
                                * np.abs(np.asarray(ref)).max())
 

@@ -2,6 +2,8 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+pytest.importorskip("hypothesis")  # gate: container may lack hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pooling import compact_pooled, pool_doc_embeddings
