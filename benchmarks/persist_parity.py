@@ -1,0 +1,94 @@
+"""Cross-process persistence parity check (the CI gate for the format).
+
+    PYTHONPATH=src python benchmarks/persist_parity.py --phase build  --dir art
+    PYTHONPATH=src python benchmarks/persist_parity.py --phase verify --dir art
+
+``build`` constructs a small index per backend (seeded random unit
+vectors — no encoder, so the check is format-only and fast), runs a
+search batch, saves the artifact AND the expected results. ``verify``
+runs in a FRESH Python process: it mmap-loads each artifact and asserts
+the search results are identical. Splitting the phases across processes
+catches in-process state leaking into the format (module-level caches,
+object identity, rng state) that a same-process round-trip test can
+never see. A delete is applied before saving so the compacted-deletion
+path is exercised across the process boundary too.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+BACKENDS = ("flat", "hnsw", "plaid")
+DELETED = (0, 3, 7)
+
+
+def _corpus(dim=16, n=40):
+    rng = np.random.default_rng(42)
+    docs = []
+    for _ in range(n):
+        v = rng.normal(size=(rng.integers(4, 20), dim)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    qs = rng.normal(size=(6, 5, dim)).astype(np.float32)
+    return docs, qs / np.linalg.norm(qs, axis=-1, keepdims=True)
+
+
+def _make_index(backend, dim=16):
+    from repro.core.index import MultiVectorIndex
+    return MultiVectorIndex(dim=dim, backend=backend, doc_maxlen=24,
+                            n_centroids=16, ndocs=64)
+
+
+def build(out_dir: str) -> int:
+    docs, qs = _corpus()
+    for backend in BACKENDS:
+        index = _make_index(backend)
+        index.add(docs)
+        index.delete(list(DELETED))
+        S, I = index.search_batch(qs, k=8)
+        index.save(os.path.join(out_dir, backend))
+        np.savez(os.path.join(out_dir, f"expected_{backend}.npz"),
+                 S=np.asarray(S), I=np.asarray(I), qs=qs)
+        print(f"built {backend}: {index.n_docs} docs "
+              f"({len(DELETED)} deleted) -> {out_dir}/{backend}")
+    return 0
+
+
+def verify(out_dir: str) -> int:
+    from repro.core.persist import load_index
+    failures = 0
+    for backend in BACKENDS:
+        exp = np.load(os.path.join(out_dir, f"expected_{backend}.npz"))
+        index = load_index(os.path.join(out_dir, backend), mmap=True)
+        S, I = index.search_batch(exp["qs"], k=8)
+        ids_ok = np.array_equal(np.asarray(I), exp["I"])
+        scores_ok = np.allclose(np.asarray(S), exp["S"],
+                                rtol=1e-5, atol=1e-6, equal_nan=True)
+        no_deleted = not np.isin(np.asarray(I)[np.asarray(I) >= 0],
+                                 DELETED).any()
+        ok = ids_ok and scores_ok and no_deleted
+        failures += not ok
+        print(f"{backend}: ids={'ok' if ids_ok else 'MISMATCH'} "
+              f"scores={'ok' if scores_ok else 'MISMATCH'} "
+              f"deleted-filtered={'ok' if no_deleted else 'LEAKED'}")
+    if failures:
+        print(f"FAILED: {failures} backend(s) lost parity across the "
+              f"process boundary", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--phase", required=True, choices=("build", "verify"))
+    ap.add_argument("--dir", required=True)
+    args = ap.parse_args(argv)
+    if args.phase == "build":
+        os.makedirs(args.dir, exist_ok=True)
+        return build(args.dir)
+    return verify(args.dir)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,9 +3,12 @@ from repro.core.pooling import (METHODS, compact_pooled, pool_doc_embeddings,
                                 vector_counts)
 from repro.core.maxsim import maxsim_scores, maxsim_scores_blocked, topk_docs
 from repro.core.index import MultiVectorIndex
+from repro.core.persist import (IndexFormatError, artifact_bytes,
+                                load_index, save_index)
 
 __all__ = [
     "METHODS", "compact_pooled", "pool_doc_embeddings", "vector_counts",
     "maxsim_scores", "maxsim_scores_blocked", "topk_docs",
     "MultiVectorIndex",
+    "IndexFormatError", "artifact_bytes", "load_index", "save_index",
 ]

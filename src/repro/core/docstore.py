@@ -48,6 +48,29 @@ class DocStore:
         self.live = np.zeros((0,), bool)
         self._padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
 
+    @classmethod
+    def from_arrays(cls, flat: np.ndarray, offsets: np.ndarray,
+                    live: np.ndarray, doc_maxlen: int = 256) -> "DocStore":
+        """Adopt persisted arrays without copying (core/persist.py).
+
+        ``flat`` may be a read-only memmap: reads (``padded``/``doc``)
+        work in place, and any growing ``add`` copies into a fresh
+        writable buffer via ``_reserve`` (capacity == n_vectors here,
+        so the first non-empty add always grows). ``live`` is mutated
+        by ``delete`` and must be writable.
+        """
+        self = cls.__new__(cls)
+        self.dim = int(flat.shape[1]) if flat.ndim == 2 else 0
+        self.doc_maxlen = doc_maxlen
+        self._n_vectors = int(offsets[-1]) if len(offsets) else 0
+        # len-0 capacity would deadlock _reserve's doubling loop
+        self._flat = (flat if len(flat)
+                      else np.zeros((1, max(self.dim, 1)), np.float32))
+        self.offsets = np.array(offsets, np.int64)
+        self.live = np.array(live, bool)
+        self._padded = None
+        return self
+
     # ------------------------------------------------------------- sizes
     @property
     def n_docs(self) -> int:

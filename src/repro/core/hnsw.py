@@ -33,6 +33,36 @@ class HNSW:
         self.max_level = -1
         self.deleted: set = set()
 
+    @classmethod
+    def from_state(cls, dim: int, m: int, ef_construction: int,
+                   vectors: np.ndarray, levels: np.ndarray,
+                   edge_counts: np.ndarray, edges: np.ndarray,
+                   deleted: np.ndarray, entry: int, max_level: int,
+                   seed: int = 0) -> "HNSW":
+        """Rebuild from persisted CSR graph state (core/persist.py).
+
+        ``vectors`` may be a read-only memmap (search only reads it;
+        ``add`` concatenates into a fresh array). The rng restarts from
+        ``seed``, so level draws of post-load inserts are independent
+        of the saved instance's draw history — search over the saved
+        graph is unaffected.
+        """
+        self = cls(dim, m=m, ef_construction=ef_construction, seed=seed)
+        self.vectors = np.asarray(vectors, np.float32)
+        self.levels = [int(x) for x in levels]
+        n = len(self.levels)
+        bounds = np.zeros(edge_counts.size + 1, np.int64)
+        np.cumsum(np.asarray(edge_counts).ravel(), out=bounds[1:])
+        edges = np.asarray(edges, np.int64)
+        self.graph = [
+            [edges[bounds[lv * n + i]:bounds[lv * n + i + 1]].tolist()
+             for i in range(n)]
+            for lv in range(edge_counts.shape[0])]
+        self.entry = None if entry < 0 else int(entry)
+        self.max_level = int(max_level)
+        self.deleted = set(int(i) for i in np.asarray(deleted))
+        return self
+
     # -- distances: inner product on unit vectors (cosine) ------------------
     def _sims(self, q, ids):
         return self.vectors[ids] @ q

@@ -160,6 +160,22 @@ class MultiVectorIndex:
         else:
             self._plaid.add(doc_vectors)
 
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str, extra_meta: Optional[dict] = None) -> dict:
+        """Write a versioned artifact directory (core/persist.py);
+        lazily-deleted docs are compacted out of the payload bytes.
+        Returns the manifest."""
+        from repro.core import persist
+        return persist.save_index(self, path, extra_meta=extra_meta)
+
+    @classmethod
+    def load(cls, path: str, mmap: bool = True) -> "MultiVectorIndex":
+        """Reconstruct an index from ``save``'s directory. With
+        ``mmap=True`` the payloads stay on disk (zero-copy) until the
+        first search touches them."""
+        from repro.core import persist
+        return persist.load_index(path, mmap=mmap)
+
     def delete(self, doc_ids) -> None:
         self.deleted.update(int(i) for i in doc_ids)
         if self.backend == "hnsw" and self._hnsw is not None:

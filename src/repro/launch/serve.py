@@ -10,16 +10,24 @@ pass first so the reported percentiles are steady-state; the driver
 reports QPS and p50/p99 per batch size plus the index footprint. On the
 production mesh the doc shards live on the ``data`` axis; here it runs
 the same code single-host.
+
+``--index-dir`` makes the index a persistent artifact (core/persist.py):
+if the directory already holds a manifest the index is mmap-loaded from
+it — no document encoding, no index build, restart-to-serving in the
+cold-load time printed — otherwise the built index is saved there for
+the next restart.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.persist import MANIFEST_NAME, artifact_bytes, load_index
 from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
 from repro.models.colbert import init_colbert
 from repro.retrieval.indexer import Indexer
@@ -59,6 +67,10 @@ def main(argv=None):
     ap.add_argument("--batch-sizes", default="1,8,32",
                     help="comma-separated microbatch sizes")
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--index-dir", default=None,
+                    help="artifact directory: load the index from it if "
+                         "a manifest exists (skip corpus encode + build), "
+                         "otherwise build and save to it")
     args = ap.parse_args(argv)
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b]
     if not batch_sizes or any(b <= 0 for b in batch_sizes):
@@ -70,14 +82,30 @@ def main(argv=None):
     corpus = SyntheticRetrievalCorpus(DATASET_SPECS[args.dataset],
                                       vocab_size=cfg.trunk.vocab_size)
 
-    t0 = time.time()
-    indexer = Indexer(params, cfg, pool_method=args.pool_method,
-                      pool_factor=args.pool_factor, backend=args.backend)
-    index, stats = indexer.build(corpus.doc_token_batch(cfg.doc_maxlen - 2))
-    t_build = time.time() - t0
-    print(f"index: {stats.n_docs} docs, {stats.n_vectors_stored} vectors "
-          f"({stats.vector_reduction:.0%} reduction), "
-          f"{stats.index_bytes / 2**20:.1f} MiB, built in {t_build:.1f}s")
+    have_artifact = (args.index_dir is not None and os.path.isfile(
+        os.path.join(args.index_dir, MANIFEST_NAME)))
+    if have_artifact:
+        t0 = time.time()
+        index = load_index(args.index_dir, mmap=True)
+        t_load = time.time() - t0
+        print(f"index: loaded {args.index_dir} — {index.n_docs} docs, "
+              f"{artifact_bytes(args.index_dir) / 2**20:.1f} MiB on disk, "
+              f"cold load {t_load * 1e3:.0f}ms (no encoder run)")
+    else:
+        t0 = time.time()
+        indexer = Indexer(params, cfg, pool_method=args.pool_method,
+                          pool_factor=args.pool_factor,
+                          backend=args.backend)
+        index, stats = indexer.build(
+            corpus.doc_token_batch(cfg.doc_maxlen - 2),
+            out_dir=args.index_dir)
+        t_build = time.time() - t0
+        print(f"index: {stats.n_docs} docs, "
+              f"{stats.n_vectors_stored} vectors "
+              f"({stats.vector_reduction:.0%} reduction), "
+              f"{stats.index_bytes / 2**20:.1f} MiB on disk, "
+              f"built in {t_build:.1f}s"
+              + (f", saved to {args.index_dir}" if args.index_dir else ""))
 
     searcher = Searcher(params, cfg, index)
     q_all = corpus.query_token_batch(cfg.query_maxlen - 2)

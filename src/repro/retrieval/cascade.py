@@ -62,6 +62,17 @@ class CascadeIndex:
         self._fine.add(fine)
         return ids
 
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str) -> dict:
+        """Write both pool levels as one artifact dir (core/persist.py)."""
+        from repro.core import persist
+        return persist.save_cascade(self, path)
+
+    @classmethod
+    def from_dir(cls, path: str, mmap: bool = True) -> "CascadeIndex":
+        from repro.core import persist
+        return persist.load_cascade(path, mmap=mmap)
+
     def search_batch(self, qs: np.ndarray, k: int = 10
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -inf/-1 pads)."""

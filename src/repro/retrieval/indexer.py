@@ -13,6 +13,9 @@ gathered host-side lists (index construction is host-bound bookkeeping).
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
 from dataclasses import dataclass
 from typing import List, Optional
 
@@ -30,13 +33,17 @@ class IndexStats:
     n_docs: int
     n_vectors_raw: int
     n_vectors_stored: int
-    index_bytes: int
+    index_bytes: int     # real serialized artifact size (core/persist.py)
 
     @property
     def vector_reduction(self) -> float:
         if self.n_vectors_raw == 0:
             return 0.0
         return 1.0 - self.n_vectors_stored / self.n_vectors_raw
+
+    def to_json(self) -> dict:
+        return dict(dataclasses.asdict(self),
+                    vector_reduction=self.vector_reduction)
 
 
 class Indexer:
@@ -74,8 +81,18 @@ class Indexer:
             out.extend(docs[:B - pad] if pad else docs)
         return out
 
-    def build(self, doc_tokens: np.ndarray):
-        """Returns (MultiVectorIndex, IndexStats)."""
+    def build(self, doc_tokens: np.ndarray,
+              out_dir: Optional[str] = None):
+        """Returns (MultiVectorIndex, IndexStats).
+
+        ``out_dir`` writes the index artifact (core/persist.py) plus a
+        ``stats.json`` beside its manifest, so the built index can be
+        re-served by ``Searcher.from_dir`` / ``serve --index-dir``
+        without re-encoding the corpus. ``index_bytes`` is always the
+        *serialized* size — what the artifact occupies on disk — not
+        the in-memory high-water mark.
+        """
+        from repro.core.persist import artifact_bytes, serialized_nbytes
         doc_vecs = self.encode_and_pool(doc_tokens)
         raw = self._raw_vector_count(doc_tokens)
         kw = dict(doc_maxlen=self.cfg.doc_maxlen,
@@ -87,12 +104,22 @@ class Indexer:
         index = MultiVectorIndex(dim=self.cfg.proj_dim,
                                  backend=self.backend, **kw)
         index.add(doc_vecs)
+        if out_dir is not None:
+            manifest = index.save(out_dir, extra_meta={
+                "pool": {"method": self.pool_method,
+                         "factor": self.pool_factor}})
+            index_bytes = artifact_bytes(manifest)
+        else:
+            index_bytes = serialized_nbytes(index)
         stats = IndexStats(
             n_docs=index.n_docs,
             n_vectors_raw=raw,
             n_vectors_stored=index.n_vectors(),
-            index_bytes=index.nbytes(),
+            index_bytes=index_bytes,
         )
+        if out_dir is not None:
+            with open(os.path.join(out_dir, "stats.json"), "w") as fh:
+                json.dump(stats.to_json(), fh, indent=2)
         return index, stats
 
     def _raw_vector_count(self, doc_tokens: np.ndarray) -> int:

@@ -29,6 +29,14 @@ class Searcher:
         self.index = index
         self.encode_batch = encode_batch
 
+    @classmethod
+    def from_dir(cls, params, cfg: ColbertConfig, path: str,
+                 mmap: bool = True, encode_batch: int = 64) -> "Searcher":
+        """Serve a persisted index artifact: no corpus encode, no index
+        build — the document payloads stay on disk until first search."""
+        return cls(params, cfg, MultiVectorIndex.load(path, mmap=mmap),
+                   encode_batch=encode_batch)
+
     def encode(self, query_tokens: np.ndarray) -> np.ndarray:
         """[Nq, L] -> [Nq, Lq, dim] (all expansion slots emit)."""
         out = []

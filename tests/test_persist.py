@@ -1,0 +1,323 @@
+"""Index persistence: versioned save/load artifacts (core/persist.py).
+
+Locks the on-disk format down from four directions:
+  * round-trip parity — every backend x pool method returns identical
+    results after ``save`` -> ``load(mmap=True)``, including after
+    ``delete`` (whose docs must also be compacted out of the bytes);
+  * corruption & versioning — torn/missing/tampered artifacts raise
+    ``IndexFormatError`` instead of producing garbage results;
+  * footprint honesty — ``IndexStats.index_bytes`` is the serialized
+    size, and plaid-on-disk beats flat-on-disk on the same corpus;
+  * cross-process — a fresh Python interpreter loads what this one
+    saved (catches in-process state leaking into the format).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.docstore import DocStore
+from repro.core.index import MultiVectorIndex
+from repro.core.persist import (FORMAT_VERSION, MANIFEST_NAME,
+                                IndexFormatError, artifact_bytes,
+                                load_index, serialized_nbytes)
+from repro.core.pooling import compact_pooled, pool_doc_embeddings
+
+BACKENDS = ["flat", "hnsw", "plaid"]
+POOL_METHODS = ["none", "sequential", "ward"]
+
+
+def unit_docs(rng, n=30, dim=16, lo=4, hi=20):
+    docs = []
+    for _ in range(n):
+        v = rng.normal(size=(rng.integers(lo, hi), dim)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    return docs
+
+
+def unit_queries(rng, n, lq=5, dim=16):
+    q = rng.normal(size=(n, lq, dim)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def pooled_docs(rng, method, factor=2, **kw):
+    """Random unit docs run through the paper's pooling step."""
+    docs = unit_docs(rng, **kw)
+    if method == "none":
+        return docs
+    dim = docs[0].shape[1]
+    L = max(len(d) for d in docs)
+    x = np.zeros((len(docs), L, dim), np.float32)
+    mask = np.zeros((len(docs), L), bool)
+    for i, d in enumerate(docs):
+        x[i, :len(d)] = d
+        mask[i, :len(d)] = True
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                        factor, method)
+    return compact_pooled(pooled, pmask)
+
+
+def make_index(backend, dim=16):
+    return MultiVectorIndex(dim=dim, backend=backend, doc_maxlen=24,
+                            n_centroids=16, ndocs=64)
+
+
+def assert_same_results(res_a, res_b, backend):
+    S0, I0 = res_a
+    S1, I1 = res_b
+    assert np.array_equal(np.asarray(I0), np.asarray(I1)), backend
+    # fp tolerance for plaid's decode path; flat/hnsw are bit-identical
+    rtol = 1e-5 if backend == "plaid" else 0.0
+    np.testing.assert_allclose(np.asarray(S0), np.asarray(S1),
+                               rtol=rtol, atol=1e-7)
+
+
+# ------------------------------------------------------- round-trip parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("method", POOL_METHODS)
+def test_roundtrip_parity(tmp_path, backend, method):
+    rng = np.random.default_rng(0)
+    docs = pooled_docs(rng, method)
+    idx = make_index(backend)
+    idx.add(docs)
+    qs = unit_queries(rng, 6)
+    before = idx.search_batch(qs, k=8)
+
+    idx.save(tmp_path / "a")
+    loaded = MultiVectorIndex.load(tmp_path / "a", mmap=True)
+    assert_same_results(before, loaded.search_batch(qs, k=8), backend)
+
+    # delete -> the saved artifact must compact the bytes out while
+    # keeping ids stable and parity with the in-memory index
+    drop = [0, 3, 7]
+    idx.delete(drop)
+    after_del = idx.search_batch(qs, k=8)
+    idx.save(tmp_path / "b")
+    assert artifact_bytes(tmp_path / "b") < artifact_bytes(tmp_path / "a")
+    loaded2 = MultiVectorIndex.load(tmp_path / "b", mmap=True)
+    res2 = loaded2.search_batch(qs, k=8)
+    assert_same_results(after_del, res2, backend)
+    ids = np.asarray(res2[1])
+    assert not np.isin(ids[ids >= 0], drop).any()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_loaded_index_stays_crud_capable(tmp_path, backend):
+    """mmap'd payloads are read-only — add/delete must copy-on-grow,
+    not crash or corrupt the mapped file."""
+    rng = np.random.default_rng(1)
+    idx = make_index(backend)
+    idx.add(unit_docs(rng))
+    idx.save(tmp_path / "idx")
+    loaded = MultiVectorIndex.load(tmp_path / "idx", mmap=True)
+    new_ids = loaded.add(unit_docs(rng, n=5))
+    assert list(new_ids) == list(range(30, 35))
+    loaded.delete([int(new_ids[0]), 2])
+    S, I = loaded.search_batch(unit_queries(rng, 3), k=10)
+    assert not np.isin(np.asarray(I), [int(new_ids[0]), 2]).any()
+    # the artifact on disk is untouched by post-load mutation
+    again = MultiVectorIndex.load(tmp_path / "idx", mmap=True)
+    assert again.n_docs == 30
+
+
+def test_empty_index_roundtrip(tmp_path):
+    for backend in BACKENDS:
+        idx = make_index(backend)
+        idx.save(tmp_path / backend)
+        loaded = MultiVectorIndex.load(tmp_path / backend)
+        assert loaded.n_docs == 0
+        S, I = loaded.search_batch(np.zeros((2, 3, 16), np.float32), k=4)
+        assert (np.asarray(I) == -1).all()
+
+
+def test_docstore_from_arrays_is_zero_copy(tmp_path):
+    """mmap=True must hand the DocStore the mapped file, not a copy."""
+    rng = np.random.default_rng(2)
+    idx = make_index("flat")
+    idx.add(unit_docs(rng))
+    idx.save(tmp_path / "idx")
+    loaded = MultiVectorIndex.load(tmp_path / "idx", mmap=True)
+    assert isinstance(loaded._store._flat, np.memmap)
+
+
+def test_resave_over_existing_artifact(tmp_path):
+    """Re-saving into the same directory must never clobber the
+    published version mid-write: payloads get per-save filenames, the
+    manifest swap commits, and stale files are swept afterwards."""
+    rng = np.random.default_rng(5)
+    idx = make_index("flat")
+    idx.add(unit_docs(rng))
+    path = tmp_path / "idx"
+    m1 = idx.save(path)
+    idx.delete([1, 2])
+    m2 = idx.save(path)
+    files1 = {e["file"] for e in m1["payloads"].values()}
+    files2 = {e["file"] for e in m2["payloads"].values()}
+    assert not files1 & files2          # old version never overwritten
+    on_disk = {f for f in os.listdir(path) if f.endswith(".npy")}
+    assert on_disk == files2            # stale version swept after commit
+    qs = unit_queries(rng, 3)
+    assert_same_results(idx.search_batch(qs, k=6),
+                        MultiVectorIndex.load(path).search_batch(qs, k=6),
+                        "flat")
+
+
+# ------------------------------------------------- corruption & versioning
+def _saved_flat(tmp_path, n=12):
+    rng = np.random.default_rng(3)
+    idx = make_index("flat")
+    idx.add(unit_docs(rng, n=n))
+    path = tmp_path / "idx"
+    idx.save(path)
+    return path
+
+
+def _payload_file(path, name):
+    manifest = json.loads((path / MANIFEST_NAME).read_text())
+    return path / manifest["payloads"][name]["file"]
+
+
+def test_missing_manifest_raises(tmp_path):
+    with pytest.raises(IndexFormatError, match="manifest"):
+        load_index(tmp_path)
+
+
+@pytest.mark.parametrize("mmap", [True, False])
+def test_truncated_payload_raises(tmp_path, mmap):
+    path = _saved_flat(tmp_path)
+    fp = _payload_file(path, "flat")
+    with open(fp, "r+b") as fh:
+        fh.truncate(os.path.getsize(fp) - 64)
+    with pytest.raises(IndexFormatError, match="flat"):
+        load_index(path, mmap=mmap)
+
+
+def test_missing_payload_file_raises(tmp_path):
+    path = _saved_flat(tmp_path)
+    os.remove(_payload_file(path, "offsets"))
+    with pytest.raises(IndexFormatError, match="offsets"):
+        load_index(path)
+
+
+@pytest.mark.parametrize("key", ["dim", "backend", "params", "payloads"])
+def test_missing_manifest_key_raises(tmp_path, key):
+    path = _saved_flat(tmp_path)
+    mf = path / MANIFEST_NAME
+    manifest = json.loads(mf.read_text())
+    del manifest[key]
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(IndexFormatError):
+        load_index(path)
+
+
+def test_bumped_format_version_raises(tmp_path):
+    path = _saved_flat(tmp_path)
+    mf = path / MANIFEST_NAME
+    manifest = json.loads(mf.read_text())
+    manifest["format_version"] = FORMAT_VERSION + 1
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(IndexFormatError, match="format_version"):
+        load_index(path)
+
+
+def test_shape_tamper_raises(tmp_path):
+    path = _saved_flat(tmp_path)
+    mf = path / MANIFEST_NAME
+    manifest = json.loads(mf.read_text())
+    manifest["payloads"]["flat"]["shape"][0] += 1
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(IndexFormatError, match="does not match"):
+        load_index(path)
+
+
+# --------------------------------------------------------- footprint honesty
+def test_serialized_nbytes_matches_artifact(tmp_path):
+    rng = np.random.default_rng(4)
+    for backend in BACKENDS:
+        idx = make_index(backend)
+        idx.add(unit_docs(rng))
+        dry = serialized_nbytes(idx)
+        manifest = idx.save(tmp_path / backend)
+        assert artifact_bytes(manifest) == dry
+        assert artifact_bytes(tmp_path / backend) == dry
+
+
+def test_plaid_on_disk_smaller_than_flat():
+    """Table 3's point, measured in serialized bytes: the 2-bit plaid
+    artifact must undercut the flat f32 artifact on the same corpus at
+    the same pool_factor (encoder -> ward pool -> both backends)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+    from repro.models.colbert import init_colbert
+    from repro.retrieval.indexer import Indexer
+    from dataclasses import replace
+
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = replace(DATASET_SPECS["scifact"], n_docs=32, n_queries=2)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    sizes = {}
+    for backend in ("plaid", "flat"):
+        _, stats = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                           backend=backend, ndocs=64).build(toks)
+        assert stats.index_bytes > 0
+        sizes[backend] = stats.index_bytes
+    assert sizes["plaid"] < sizes["flat"], sizes
+
+
+# ------------------------------------------------------------- cross-process
+def test_fresh_process_load_parity(tmp_path):
+    """Save here, load in a brand-new interpreter (benchmarks/
+    persist_parity.py): the CI job's check, kept in-suite too."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = os.path.join(repo, "benchmarks", "persist_parity.py")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    for phase in ("build", "verify"):
+        proc = subprocess.run(
+            [sys.executable, script, "--phase", phase,
+             "--dir", str(tmp_path)],
+            env=env, capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, (phase, proc.stdout, proc.stderr)
+
+
+# --------------------------------------------------------------- properties
+try:  # container may lack hypothesis (PR 1 convention: skip, don't fail)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(8, 60), bits=st.sampled_from([2, 4]),
+           seed=st.integers(0, 10 ** 6))
+    def test_codec_persist_roundtrip_property(tmp_path_factory, m, bits,
+                                              seed):
+        """encode -> save -> load -> decode == encode -> decode."""
+        from repro.core.quantization import decode, encode, train_codec
+        from repro.core.persist import load_codec, save_codec
+        rng = np.random.default_rng(seed)
+        v = rng.normal(size=(m, 16)).astype(np.float32)
+        v /= np.linalg.norm(v, axis=-1, keepdims=True)
+        c = rng.normal(size=(8, 16)).astype(np.float32)
+        c /= np.linalg.norm(c, axis=-1, keepdims=True)
+        codec = train_codec(jnp.asarray(v), jnp.asarray(c), bits=bits)
+        a, w = encode(codec, jnp.asarray(v))
+        path = tmp_path_factory.mktemp("codec")
+        save_codec(codec, path)
+        loaded = load_codec(path)
+        assert loaded.bits == codec.bits
+        np.testing.assert_array_equal(np.asarray(decode(loaded, a, w)),
+                                      np.asarray(decode(codec, a, w)))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_codec_persist_roundtrip_property():
+        pass
