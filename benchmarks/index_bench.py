@@ -1,0 +1,163 @@
+"""Index-build benchmark: monolithic vs streaming-sharded, per method x factor.
+
+    PYTHONPATH=src python benchmarks/index_bench.py --docs 300 \
+        --shard-max-vectors 2048 --out BENCH_index.json
+
+For every pool method x pool factor cell this builds the SAME corpus two
+ways and measures
+
+  * ``docs_per_s`` / ``vectors_per_s`` — build throughput (encode +
+    pool + index construction, and for streaming also the per-shard
+    artifact writes),
+  * ``peak_heap_bytes``   — tracemalloc peak of the build phase (numpy
+    buffers route through the Python allocator, so this captures the
+    host-side high-water mark the streaming path exists to bound; jax
+    device buffers are outside tracemalloc, identical for both modes),
+  * ``peak_buffered_vectors`` — the streaming builder's own pooled-
+    buffer high-water mark (IndexStats),
+
+and ASSERTS the acceptance bound: a streaming build with a cap smaller
+than the corpus must produce >= 2 shards and keep its pooled buffer
+within ``cap + max_batch_vectors`` (docs are atomic and the flush check
+runs once per encode batch — that slack is the contract, see
+``Indexer.build_streaming``). Results land in ``BENCH_index.json``;
+the README's "Scaling past RAM" table is generated from a run of this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import shutil
+import tempfile
+import time
+import tracemalloc
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+from repro.models.colbert import init_colbert
+from repro.retrieval.indexer import Indexer
+
+
+def _measured(fn):
+    """(result, wall seconds, tracemalloc peak bytes) for one build."""
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    t0 = time.time()
+    out = fn()
+    dt = time.time() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, dt, peak
+
+
+def bench_cell(params, cfg, toks, method: str, factor: int, backend: str,
+               cap: int, out_root: str, encode_batch: int):
+    def make_indexer():
+        return Indexer(params, cfg, pool_method=method, pool_factor=factor,
+                       backend=backend, encode_batch=encode_batch,
+                       ndocs=4096)
+
+    # warm the encoder trace so jit compile lands in neither measurement
+    make_indexer().encode_and_pool(toks[:encode_batch])
+
+    (_, mono_stats), mono_s, mono_peak = _measured(
+        lambda: make_indexer().build(toks))
+
+    # cap is a ceiling: higher pool factors shrink the corpus, so keep
+    # the cap below ~1/3 of the stored vectors or the cell can't shard
+    cap = min(cap, max(mono_stats.n_vectors_stored // 3, 1))
+    art = os.path.join(out_root, f"{method}_f{factor}")
+    (sharded, st), stream_s, stream_peak = _measured(
+        lambda: make_indexer().build_streaming(
+            toks, shard_max_vectors=cap, out_dir=art))
+
+    # ---- acceptance bound: bounded host buffer, real sharding ----
+    assert st.n_shards >= 2, (
+        f"cap {cap} did not shard a {st.n_vectors_stored}-vector corpus")
+    bound = cap + st.max_batch_vectors
+    assert st.peak_buffered_vectors <= bound, (
+        f"streaming buffer {st.peak_buffered_vectors} exceeded "
+        f"cap+batch bound {bound}")
+    assert st.n_vectors_stored == mono_stats.n_vectors_stored
+
+    def row(mode, stats, secs, peak):
+        return {
+            "method": method, "factor": factor, "backend": backend,
+            "mode": mode,
+            "n_docs": stats.n_docs, "n_shards": stats.n_shards,
+            "n_vectors_stored": stats.n_vectors_stored,
+            "docs_per_s": stats.n_docs / max(secs, 1e-9),
+            "vectors_per_s": stats.n_vectors_stored / max(secs, 1e-9),
+            "build_s": secs,
+            "peak_heap_bytes": int(peak),
+            "peak_buffered_vectors": stats.peak_buffered_vectors,
+            "index_bytes": stats.index_bytes,
+        }
+
+    rows = [row("monolithic", mono_stats, mono_s, mono_peak),
+            row("streaming-sharded", st, stream_s, stream_peak)]
+    for r in rows:
+        print(f"{method:10s} f={factor} {r['mode']:18s} "
+              f"{r['docs_per_s']:7.1f} docs/s {r['vectors_per_s']:9.0f} "
+              f"vec/s  peak-heap {r['peak_heap_bytes'] / 2**20:7.1f} MiB"
+              + (f"  shards={r['n_shards']} "
+                 f"buf<={r['peak_buffered_vectors']}"
+                 if r["mode"] != "monolithic" else ""))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scifact")
+    ap.add_argument("--docs", type=int, default=300)
+    ap.add_argument("--methods", default="ward,sequential")
+    ap.add_argument("--pool-factors", default="1,2,4")
+    ap.add_argument("--backend", default="flat",
+                    help="index backend under the build (flat isolates "
+                         "encode+pool+store cost; plaid adds codec train)")
+    ap.add_argument("--shard-max-vectors", type=int, default=2048)
+    ap.add_argument("--encode-batch", type=int, default=32)
+    ap.add_argument("--keep-dir", default=None)
+    ap.add_argument("--out", default="BENCH_index.json")
+    args = ap.parse_args(argv)
+    methods = [m for m in args.methods.split(",") if m]
+    factors = [int(f) for f in args.pool_factors.split(",") if f]
+
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = replace(DATASET_SPECS[args.dataset], n_docs=args.docs)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+
+    out_root = args.keep_dir or tempfile.mkdtemp(prefix="index_bench_")
+    try:
+        results = []
+        for m in methods:
+            for f in factors:
+                results += bench_cell(params, cfg, toks, m, f,
+                                      args.backend, args.shard_max_vectors,
+                                      out_root, args.encode_batch)
+    finally:
+        if args.keep_dir is None:
+            shutil.rmtree(out_root, ignore_errors=True)
+
+    out = {"dataset": args.dataset, "n_docs": args.docs,
+           "backend": args.backend,
+           "shard_max_vectors": args.shard_max_vectors,
+           "ru_maxrss_kb": resource.getrusage(resource.RUSAGE_SELF)
+                                   .ru_maxrss,
+           "results": results}
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"\nwrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

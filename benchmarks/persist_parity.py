@@ -12,6 +12,13 @@ catches in-process state leaking into the format (module-level caches,
 object identity, rng state) that a same-process round-trip test can
 never see. A delete is applied before saving so the compacted-deletion
 path is exercised across the process boundary too.
+
+Each backend is checked twice: monolithic (``<backend>/``) and a
+3-shard ``ShardedIndex`` over the same corpus (``sharded_<backend>/``).
+The sharded artifact must (a) reload to identical results in the fresh
+process and (b) — since the candidate stage is exhaustive at this size
+and plaid shares one codec — agree with the monolithic expectations,
+proving shard merge survives the process boundary, not just re-search.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ import numpy as np
 
 BACKENDS = ("flat", "hnsw", "plaid")
 DELETED = (0, 3, 7)
+SHARD_CAP = 160        # ~1/3 of the corpus's vectors -> 3 shards
 
 
 def _corpus(dim=16, n=40):
@@ -35,46 +43,82 @@ def _corpus(dim=16, n=40):
     return docs, qs / np.linalg.norm(qs, axis=-1, keepdims=True)
 
 
+_KW = dict(doc_maxlen=24, n_centroids=16, ndocs=4096, hnsw_candidates=8192)
+
+
 def _make_index(backend, dim=16):
     from repro.core.index import MultiVectorIndex
-    return MultiVectorIndex(dim=dim, backend=backend, doc_maxlen=24,
-                            n_centroids=16, ndocs=64)
+    return MultiVectorIndex(dim=dim, backend=backend, **_KW)
+
+
+def _make_sharded(backend, dim=16):
+    from repro.core.sharded import ShardedIndex
+    return ShardedIndex(dim=dim, backend=backend,
+                        shard_max_vectors=SHARD_CAP, **_KW)
 
 
 def build(out_dir: str) -> int:
     docs, qs = _corpus()
     for backend in BACKENDS:
+        sharded = _make_sharded(backend)
+        sharded.add(docs)
+        sharded.delete(list(DELETED))
         index = _make_index(backend)
+        if backend == "plaid":       # ONE codec: sharded must equal mono
+            index.set_codec(sharded.codec())
         index.add(docs)
         index.delete(list(DELETED))
         S, I = index.search_batch(qs, k=8)
+        Ss, Is = sharded.search_batch(qs, k=8)
+        assert np.array_equal(np.asarray(I), np.asarray(Is)), backend
         index.save(os.path.join(out_dir, backend))
+        sharded.save(os.path.join(out_dir, f"sharded_{backend}"))
         np.savez(os.path.join(out_dir, f"expected_{backend}.npz"),
-                 S=np.asarray(S), I=np.asarray(I), qs=qs)
+                 S=np.asarray(S), I=np.asarray(I), qs=qs,
+                 S_sharded=np.asarray(Ss), n_shards=sharded.n_shards)
         print(f"built {backend}: {index.n_docs} docs "
-              f"({len(DELETED)} deleted) -> {out_dir}/{backend}")
+              f"({len(DELETED)} deleted) + {sharded.n_shards}-shard twin "
+              f"-> {out_dir}/{{{backend},sharded_{backend}}}")
     return 0
 
 
+def _check(name, S, I, exp_S, exp_I) -> bool:
+    ids_ok = np.array_equal(np.asarray(I), exp_I)
+    scores_ok = np.allclose(np.asarray(S), exp_S,
+                            rtol=1e-5, atol=1e-6, equal_nan=True)
+    no_deleted = not np.isin(np.asarray(I)[np.asarray(I) >= 0],
+                             DELETED).any()
+    print(f"{name}: ids={'ok' if ids_ok else 'MISMATCH'} "
+          f"scores={'ok' if scores_ok else 'MISMATCH'} "
+          f"deleted-filtered={'ok' if no_deleted else 'LEAKED'}")
+    return ids_ok and scores_ok and no_deleted
+
+
 def verify(out_dir: str) -> int:
-    from repro.core.persist import load_index
+    from repro.core.persist import load_artifact
+    from repro.core.sharded import ShardedIndex
     failures = 0
     for backend in BACKENDS:
         exp = np.load(os.path.join(out_dir, f"expected_{backend}.npz"))
-        index = load_index(os.path.join(out_dir, backend), mmap=True)
+        index = load_artifact(os.path.join(out_dir, backend), mmap=True)
         S, I = index.search_batch(exp["qs"], k=8)
-        ids_ok = np.array_equal(np.asarray(I), exp["I"])
-        scores_ok = np.allclose(np.asarray(S), exp["S"],
-                                rtol=1e-5, atol=1e-6, equal_nan=True)
-        no_deleted = not np.isin(np.asarray(I)[np.asarray(I) >= 0],
-                                 DELETED).any()
-        ok = ids_ok and scores_ok and no_deleted
+        failures += not _check(backend, S, I, exp["S"], exp["I"])
+
+        sharded = load_artifact(os.path.join(out_dir,
+                                             f"sharded_{backend}"),
+                                mmap=True)
+        ok_kind = (isinstance(sharded, ShardedIndex)
+                   and sharded.n_shards == int(exp["n_shards"]))
+        Ss, Is = sharded.search_batch(exp["qs"], k=8)
+        # sharded ids must equal the MONOLITHIC expectation (merge
+        # parity), scores the sharded build's own saved scores
+        ok = _check(f"sharded_{backend}", Ss, Is, exp["S_sharded"],
+                    exp["I"]) and ok_kind
+        if not ok_kind:
+            print(f"sharded_{backend}: wrong kind/shape after reload")
         failures += not ok
-        print(f"{backend}: ids={'ok' if ids_ok else 'MISMATCH'} "
-              f"scores={'ok' if scores_ok else 'MISMATCH'} "
-              f"deleted-filtered={'ok' if no_deleted else 'LEAKED'}")
     if failures:
-        print(f"FAILED: {failures} backend(s) lost parity across the "
+        print(f"FAILED: {failures} artifact(s) lost parity across the "
               f"process boundary", file=sys.stderr)
     return 1 if failures else 0
 

@@ -3,12 +3,15 @@ from repro.core.pooling import (METHODS, compact_pooled, pool_doc_embeddings,
                                 vector_counts)
 from repro.core.maxsim import maxsim_scores, maxsim_scores_blocked, topk_docs
 from repro.core.index import MultiVectorIndex
+from repro.core.sharded import ShardedIndex
 from repro.core.persist import (IndexFormatError, artifact_bytes,
-                                load_index, save_index)
+                                load_artifact, load_index, load_sharded,
+                                save_index, save_sharded)
 
 __all__ = [
     "METHODS", "compact_pooled", "pool_doc_embeddings", "vector_counts",
     "maxsim_scores", "maxsim_scores_blocked", "topk_docs",
-    "MultiVectorIndex",
-    "IndexFormatError", "artifact_bytes", "load_index", "save_index",
+    "MultiVectorIndex", "ShardedIndex",
+    "IndexFormatError", "artifact_bytes", "load_artifact", "load_index",
+    "load_sharded", "save_index", "save_sharded",
 ]

@@ -42,6 +42,12 @@ from repro.core.quantization import train_codec
 
 BACKENDS = ("flat", "hnsw", "plaid")
 
+# construction knobs shared by persistence (manifest params) and sharding
+# (per-shard construction) — the single source of truth for both
+PARAM_KEYS = ("doc_maxlen", "n_centroids", "quant_bits", "nprobe",
+              "t_cs", "ndocs", "hnsw_m", "hnsw_ef_construction",
+              "hnsw_candidates")
+
 
 @dataclass
 class MultiVectorIndex:
@@ -66,6 +72,7 @@ class MultiVectorIndex:
     _hnsw: Optional[HNSW] = None
     _hnsw_vec2doc: Optional[np.ndarray] = None
     _plaid: Optional[PLAIDIndex] = None
+    _preset_codec: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
@@ -148,13 +155,27 @@ class MultiVectorIndex:
         self._hnsw_vec2doc = np.concatenate(
             [self._hnsw_vec2doc, np.repeat(ids, lens)])
 
+    def set_codec(self, codec) -> None:
+        """Preset the plaid residual codec instead of training on the
+        first ``add``. This is how shards of one logical index share ONE
+        quantization model (core/sharded.py): identical centroids make
+        per-shard candidate generation equivalent to monolithic probing,
+        and identical reconstructions make merged scores comparable
+        bit-for-bit across shards."""
+        assert self.backend == "plaid", self.backend
+        assert self._plaid is None, "codec must be preset before add"
+        self._preset_codec = codec
+
     def _add_plaid(self, doc_vectors):
         if self._plaid is None:
-            flat = np.concatenate(doc_vectors)
-            k = min(self.n_centroids, len(flat))
-            centroids = train_centroids(flat, k)
-            codec = train_codec(jnp.asarray(flat), centroids,
-                                bits=self.quant_bits)
+            if self._preset_codec is not None:
+                codec = self._preset_codec
+            else:
+                flat = np.concatenate(doc_vectors)
+                k = min(self.n_centroids, len(flat))
+                centroids = train_centroids(flat, k)
+                codec = train_codec(jnp.asarray(flat), centroids,
+                                    bits=self.quant_bits)
             self._plaid = build_plaid_index(doc_vectors, codec,
                                             self.doc_maxlen)
         else:
@@ -254,6 +275,31 @@ class MultiVectorIndex:
         member[rows, cand[cand_mask]] = True
         return jnp.where(jnp.asarray(member), scores, -jnp.inf)
 
+    def scored_candidates(self, qs: np.ndarray,
+                          q_mask: Optional[np.ndarray] = None
+                          ) -> Tuple[jnp.ndarray, Optional[np.ndarray]]:
+        """Both stages, no top-k: the per-index *scored slate*.
+
+        Returns ``(scores [Nq, C], cand [Nq, C] | None)`` — exact MaxSim
+        for every surviving candidate, -inf on invalid slots. ``cand``
+        is None when the scores are corpus-wide (ids = column index):
+        the flat backend, or a candidate set grown to corpus width
+        (dense rerank beats an Nq-fold gather there). This is the unit
+        ``ShardedIndex`` fans out per shard before its global merge;
+        ``search_batch`` is just slate -> top-k.
+
+        Within each query row, finite slots are ordered by ascending doc
+        id (column index when dense; sorted unique ids otherwise) —
+        except after plaid's approximate prune (cand count > ndocs),
+        which reorders survivors by approximate score. Under an
+        exhaustive candidate budget, top-k tie-breaking is id-stable.
+        """
+        qs = np.asarray(qs, np.float32)
+        cand, cand_mask = self.candidates(qs, q_mask)
+        if cand is not None and cand.shape[1] >= self.n_docs:
+            return self._rerank_dense(qs, cand, cand_mask, q_mask), None
+        return self.rerank(qs, cand, cand_mask, q_mask), cand
+
     # ----------------------------------------------------------------- search
     def search_batch(self, qs: np.ndarray, k: int = 10,
                      q_mask: Optional[np.ndarray] = None
@@ -264,12 +310,7 @@ class MultiVectorIndex:
         if self.n_docs == 0:
             return (np.full((Nq, k), -np.inf, np.float32),
                     np.full((Nq, k), -1, np.int64))
-        cand, cand_mask = self.candidates(qs, q_mask)
-        if cand is not None and cand.shape[1] >= self.n_docs:
-            scores = self._rerank_dense(qs, cand, cand_mask, q_mask)
-            cand = None                 # scores are corpus-wide, ids direct
-        else:
-            scores = self.rerank(qs, cand, cand_mask, q_mask)
+        scores, cand = self.scored_candidates(qs, q_mask)
         return topk_with_pads(scores, cand, k)
 
     def search(self, q: np.ndarray, k: int = 10

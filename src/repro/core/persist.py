@@ -42,6 +42,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.index import PARAM_KEYS as _PARAM_KEYS
+
 FORMAT_VERSION = 1
 MANIFEST_NAME = "manifest.json"
 
@@ -159,10 +161,18 @@ def load_payloads(path: str, manifest: Dict[str, Any],
 
 
 def artifact_bytes(path_or_manifest) -> int:
-    """Real serialized payload size (sum of bytes from the manifest)."""
+    """Real serialized payload size (sum of bytes from the manifest).
+
+    Sharded artifacts record each shard's payload bytes in the root
+    manifest at save time, so sizing a K-shard index stays O(manifest)
+    — no walk of the shard directories."""
     manifest = (path_or_manifest if isinstance(path_or_manifest, dict)
                 else read_manifest(path_or_manifest))
-    return sum(int(e["bytes"]) for e in manifest["payloads"].values())
+    total = sum(int(e["bytes"]) for e in manifest["payloads"].values())
+    if manifest.get("kind") == "sharded_index":
+        total += sum(int(_require(e, "bytes", "shard entry"))
+                     for e in _require(manifest, "shards", "sharded root"))
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -236,9 +246,6 @@ def load_codec(path: str, mmap: bool = True):
 # ---------------------------------------------------------------------------
 # MultiVectorIndex <-> artifact
 # ---------------------------------------------------------------------------
-_PARAM_KEYS = ("doc_maxlen", "n_centroids", "quant_bits", "nprobe",
-               "t_cs", "ndocs", "hnsw_m", "hnsw_ef_construction",
-               "hnsw_candidates")
 
 
 def index_payloads(index) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
@@ -391,6 +398,114 @@ def _plaid_from(index, payloads, manifest):
         doc_offsets=payloads["doc_offsets"],
         doc_maxlen=index.doc_maxlen)
     index.deleted = set(np.nonzero(~payloads["live"])[0].tolist())
+
+
+# ---------------------------------------------------------------------------
+# ShardedIndex <-> artifact (root manifest + per-shard artifact dirs)
+# ---------------------------------------------------------------------------
+def _shard_dirname(i: int) -> str:
+    return f"shard_{i:05d}"
+
+
+def finalize_sharded(sharded, path: str,
+                     extra_meta: Optional[Dict[str, Any]] = None
+                     ) -> Dict[str, Any]:
+    """Publish the ROOT manifest over already-written shard artifacts.
+
+    The streaming builder saves each shard the moment it is flushed
+    (bounded host memory); this records the shard table — dir, id base,
+    doc count, payload bytes — and commits it atomically, so a crash
+    mid-build leaves shard dirs but never a root manifest pointing at
+    missing shards. ``save_sharded`` = write every shard, then this.
+    """
+    entries = []
+    for i, shard in enumerate(sharded.shards):
+        name = _shard_dirname(i)
+        sub = os.path.join(path, name)
+        m = read_manifest(sub)          # validates the shard artifact
+        if m["kind"] != "multi_vector_index":
+            raise IndexFormatError(
+                f"shard dir {name!r} holds kind {m['kind']!r}, expected "
+                f"'multi_vector_index'")
+        entries.append({"dir": name, "base": int(sharded.doc_base[i]),
+                        "n_docs": int(shard.n_docs),
+                        "bytes": artifact_bytes(m)})
+    meta: Dict[str, Any] = {
+        "kind": "sharded_index",
+        "backend": sharded.backend,
+        "dim": int(sharded.dim),
+        "n_docs": int(sharded.n_docs),
+        "shard_max_vectors": int(sharded.shard_max_vectors),
+        "params": dict(sharded.index_kw),
+        "shards": entries,
+    }
+    if extra_meta:
+        meta.update(extra_meta)
+    return write_artifact(path, meta, {})
+
+
+def save_sharded(sharded, path: str,
+                 extra_meta: Optional[Dict[str, Any]] = None
+                 ) -> Dict[str, Any]:
+    """Write every shard's artifact dir, then the root manifest."""
+    for i, shard in enumerate(sharded.shards):
+        save_index(shard, os.path.join(path, _shard_dirname(i)))
+    return finalize_sharded(sharded, path, extra_meta=extra_meta)
+
+
+def load_sharded(path: str, mmap: bool = True):
+    """Reconstruct a ShardedIndex; each shard mmap-loads lazily, so a
+    K-shard cold load is K manifest parses, zero payload reads."""
+    from repro.core.sharded import ShardedIndex
+
+    manifest = read_manifest(path)
+    if manifest["kind"] != "sharded_index":
+        raise IndexFormatError(f"expected kind 'sharded_index', found "
+                               f"{manifest['kind']!r}")
+    if not manifest.get("shards"):      # empty logical index round-trips
+        return ShardedIndex(
+            dim=int(_require(manifest, "dim", path)),
+            backend=_require(manifest, "backend", path),
+            shard_max_vectors=int(manifest.get("shard_max_vectors", 0)),
+            **dict(manifest.get("params", {})))
+    shards, bases = [], []
+    base = 0
+    for e in _require(manifest, "shards", path):
+        for key in ("dir", "base", "n_docs"):
+            _require(e, key, "shard entry")
+        shard = load_index(os.path.join(path, e["dir"]), mmap=mmap)
+        if int(e["base"]) != base or shard.n_docs != int(e["n_docs"]):
+            raise IndexFormatError(
+                f"shard {e['dir']!r}: doc range [{e['base']}, "
+                f"{e['base']}+{e['n_docs']}) disagrees with loaded shard "
+                f"({base} docs seen, {shard.n_docs} in shard)")
+        shards.append(shard)
+        bases.append(base)
+        base += shard.n_docs
+    out = ShardedIndex.from_parts(
+        shards, bases,
+        shard_max_vectors=int(manifest.get("shard_max_vectors", 0)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kind dispatch: one entry point for any artifact directory
+# ---------------------------------------------------------------------------
+def load_artifact(path: str, mmap: bool = True):
+    """Load whatever index artifact lives at ``path``, dispatching on the
+    manifest ``kind`` — monolithic, sharded, cascade, or bare codec.
+    The transparent loader behind ``Searcher.from_dir`` and
+    ``serve --index-dir``: callers need not know how the index was built."""
+    kind = read_manifest(path)["kind"]
+    if kind == "multi_vector_index":
+        return load_index(path, mmap=mmap)
+    if kind == "sharded_index":
+        return load_sharded(path, mmap=mmap)
+    if kind == "cascade_index":
+        return load_cascade(path, mmap=mmap)
+    if kind == "residual_codec":
+        return load_codec(path, mmap=mmap)
+    raise IndexFormatError(f"unknown artifact kind {kind!r} at {path!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -26,10 +26,17 @@ METHODS = ("none", "sequential", "kmeans", "ward")
 
 
 def sequential_assign(mask, factor: int):
-    """assign[t] = t // factor over valid tokens. mask: [B, N]."""
-    B, N = mask.shape
-    a = (jnp.arange(N) // factor).astype(jnp.int32)
-    return jnp.broadcast_to(a, (B, N))
+    """Mask-aware run grouping: the g-th VALID token joins group
+    ``g // factor``. mask: [B, N] -> assign [B, N] int32.
+
+    Grouping by valid-token rank (``cumsum(mask) - 1``) rather than raw
+    position means punctuation-masked gaps don't split a run: a doc with
+    n valid tokens pools to exactly ``ceil(n / factor)`` vectors instead
+    of one per partially-covered position block. Masked positions get an
+    arbitrary (weight-zero) group id.
+    """
+    rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+    return (jnp.maximum(rank, 0) // factor).astype(jnp.int32)
 
 
 def _mean_pool_by_assign(x, mask, assign, num_segments: int,
@@ -108,11 +115,20 @@ def pool_doc_embeddings(x, mask, factor: int, method: str = "ward",
 
 
 def compact_pooled(pooled, pooled_mask):
-    """Host-side: drop empty slots -> list of [n_i, d] numpy arrays."""
+    """Host-side: drop empty slots -> list of [n_i, d] numpy arrays.
+
+    One device->host transfer and ONE boolean gather over the whole
+    batch; the per-doc arrays are ``np.split`` views on the cumulative
+    counts (no per-doc fancy-index loop).
+    """
     import numpy as np
     pooled = np.asarray(pooled)
-    pooled_mask = np.asarray(pooled_mask)
-    return [pooled[b][pooled_mask[b]] for b in range(pooled.shape[0])]
+    pooled_mask = np.asarray(pooled_mask).astype(bool)
+    if pooled.shape[0] == 0:
+        return []
+    counts = pooled_mask.sum(axis=1)
+    flat = pooled[pooled_mask]                    # [sum(counts), d]
+    return np.split(flat, np.cumsum(counts[:-1]))
 
 
 def vector_counts(mask, pooled_mask):

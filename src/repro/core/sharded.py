@@ -1,0 +1,242 @@
+"""ShardedIndex: K capped MultiVectorIndex shards behind ONE logical index.
+
+The paper shrinks the *stored* index; this module makes the stored index
+scale past what one host buffer (or one build pass) can hold, the way
+ColBERTv2/PLAID chunk their index construction. A ``ShardedIndex`` owns
+an ordered list of ``MultiVectorIndex`` shards plus the global doc-id
+partition:
+
+  * shard ``s`` owns the contiguous global id range
+    ``[doc_base[s], doc_base[s] + shards[s].n_docs)`` — ids are assigned
+    in stream order, so a sharded build numbers documents exactly like
+    the monolithic build it replaces;
+  * ``add`` routes to the LAST shard and spills into a fresh shard when
+    ``shard_max_vectors`` would be exceeded (only the last shard ever
+    grows, so earlier ranges stay frozen);
+  * ``delete`` maps global ids -> owning shard via the doc_base table
+    (one ``searchsorted``, no per-id loop);
+  * ``search_batch`` fans the batched two-stage engine out per shard —
+    each shard produces its exact-MaxSim *scored slate*
+    (``MultiVectorIndex.scored_candidates``) — and a shared device-side
+    merge concatenates the slates along the candidate axis and takes ONE
+    global top-k. Slates are concatenated in shard order with ascending
+    local ids inside, so merged tie-breaking (lowest global id first)
+    matches the monolithic index bit-for-bit.
+
+Parity contract (locked by tests/test_sharded*.py): with every backend's
+candidate stage exhaustive (flat always; hnsw_candidates / plaid nprobe +
+ndocs generous) and — for plaid — one codec shared across shards
+(``MultiVectorIndex.set_codec``; the streaming builder trains it on the
+first shard), ``search_batch`` returns exactly the monolithic result:
+same ids, same scores, same tie order.
+
+Per-shard probe times from the last ``search_batch`` are kept in
+``last_probe_s`` (serve.py reports them per shard).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import BACKENDS, PARAM_KEYS, MultiVectorIndex
+from repro.core.maxsim import topk_with_pads
+
+# shard construction knobs forwarded verbatim to MultiVectorIndex — the
+# same set the persistence manifest records (single source of truth)
+SHARD_PARAM_KEYS = PARAM_KEYS
+
+
+class ShardedIndex:
+    """One logical multi-vector index over capped on-disk/in-memory shards."""
+
+    def __init__(self, dim: int, backend: str = "plaid",
+                 shard_max_vectors: int = 0, **index_kw):
+        assert backend in BACKENDS, backend
+        unknown = set(index_kw) - set(SHARD_PARAM_KEYS)
+        assert not unknown, f"unknown shard params {sorted(unknown)}"
+        self.dim = dim
+        self.backend = backend
+        self.shard_max_vectors = int(shard_max_vectors)  # 0 = uncapped
+        self.index_kw: Dict = dict(index_kw)
+        self.shards: List[MultiVectorIndex] = []
+        self.doc_base: List[int] = []
+        self.last_probe_s: List[float] = []
+
+    @classmethod
+    def from_parts(cls, shards: Sequence[MultiVectorIndex],
+                   doc_base: Sequence[int],
+                   shard_max_vectors: int = 0) -> "ShardedIndex":
+        """Adopt already-built shards (persistence / streaming build).
+
+        ``doc_base`` must be the cumulative doc counts: base[0] == 0 and
+        base[s+1] == base[s] + shards[s].n_docs.
+        """
+        assert len(shards) == len(doc_base)
+        first = shards[0] if len(shards) else None
+        kw = ({k: getattr(first, k) for k in SHARD_PARAM_KEYS}
+              if first is not None else {})
+        self = cls(dim=(first.dim if first is not None else 0),
+                   backend=(first.backend if first is not None else "flat"),
+                   shard_max_vectors=shard_max_vectors, **kw)
+        base = 0
+        for s, b in zip(shards, doc_base):
+            assert s.backend == self.backend and s.dim == self.dim
+            assert int(b) == base, (b, base)
+            base += s.n_docs
+        self.shards = list(shards)
+        self.doc_base = [int(b) for b in doc_base]
+        return self
+
+    # ------------------------------------------------------------- topology
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_docs(self) -> int:
+        if not self.shards:
+            return 0
+        return self.doc_base[-1] + self.shards[-1].n_docs
+
+    def n_vectors(self) -> int:
+        return sum(s.n_vectors() for s in self.shards)
+
+    def nbytes(self) -> int:
+        return sum(s.nbytes() for s in self.shards)
+
+    def shard_of(self, doc_ids: np.ndarray) -> np.ndarray:
+        """Global doc ids -> owning shard index (vectorized)."""
+        ids = np.asarray(doc_ids, np.int64)
+        if not self.shards:
+            raise IndexError("empty sharded index")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_docs):
+            raise IndexError(f"doc id out of range [0, {self.n_docs})")
+        return np.searchsorted(np.asarray(self.doc_base, np.int64), ids,
+                               side="right") - 1
+
+    def codec(self):
+        """The shared plaid residual codec (None for other backends)."""
+        for s in self.shards:
+            if s._plaid is not None:
+                return s._plaid.codec
+        return None
+
+    # ----------------------------------------------------------------- build
+    def _new_shard(self) -> MultiVectorIndex:
+        shard = MultiVectorIndex(dim=self.dim, backend=self.backend,
+                                 **self.index_kw)
+        if self.backend == "plaid":
+            codec = self.codec()
+            if codec is not None:       # ONE quantization model per index
+                shard.set_codec(codec)
+        self.doc_base.append(self.n_docs)
+        self.shards.append(shard)
+        return shard
+
+    def add(self, doc_vectors: List[np.ndarray]) -> np.ndarray:
+        """Append docs; spills into new shards at ``shard_max_vectors``.
+
+        Returns GLOBAL doc ids — contiguous, in input order, regardless
+        of how the docs land on shards.
+        """
+        doc_vectors = [np.asarray(v, np.float32).reshape(-1, self.dim)
+                       for v in doc_vectors]
+        out: List[np.ndarray] = []
+        lens = [len(v) for v in doc_vectors]
+        i = 0
+        while i < len(doc_vectors):
+            shard = self.shards[-1] if self.shards else self._new_shard()
+            cap = self.shard_max_vectors
+            if cap:
+                room = cap - shard.n_vectors()
+                j = i
+                used = 0
+                # docs are atomic: take at least one into an empty shard
+                while j < len(doc_vectors) and (
+                        used + lens[j] <= room or (j == i and
+                                                   shard.n_docs == 0)):
+                    used += lens[j]
+                    j += 1
+                if j == i:              # shard full: spill to a fresh one
+                    self._new_shard()
+                    continue
+            else:
+                j = len(doc_vectors)
+            base = self.doc_base[-1]
+            out.append(base + shard.add(doc_vectors[i:j]))
+            i = j
+        return (np.concatenate(out) if out else np.zeros((0,), np.int64))
+
+    def delete(self, doc_ids) -> None:
+        ids = np.asarray(doc_ids, np.int64).reshape(-1)
+        if ids.size == 0:
+            return
+        owner = self.shard_of(ids)
+        for s in np.unique(owner):
+            local = ids[owner == s] - self.doc_base[s]
+            self.shards[s].delete(local)
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str, extra_meta: Optional[dict] = None) -> dict:
+        """Root manifest + one artifact dir per shard (core/persist.py)."""
+        from repro.core import persist
+        return persist.save_sharded(self, path, extra_meta=extra_meta)
+
+    @classmethod
+    def load(cls, path: str, mmap: bool = True) -> "ShardedIndex":
+        from repro.core import persist
+        return persist.load_sharded(path, mmap=mmap)
+
+    # ----------------------------------------------------------------- search
+    def search_batch(self, qs: np.ndarray, k: int = 10,
+                     q_mask: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -inf/-1 pads).
+
+        Fan-out: each live shard runs candidates + exact rerank and
+        yields its scored slate; merge: slates concatenate along the
+        candidate axis (local ids shifted by the shard's doc_base) and
+        one shared device-side top-k picks the global winners. Device
+        work syncs ONCE, at the merge — ``last_probe_s`` records each
+        shard's host-side probe + dispatch wall time (stage 1 is
+        host-bound numpy for hnsw/plaid, so this is the shard cost that
+        matters; no per-shard device barrier is inserted).
+        """
+        qs = np.asarray(qs, np.float32)
+        Nq = len(qs)
+        slate_s: List[jnp.ndarray] = []
+        slate_i: List[np.ndarray] = []
+        self.last_probe_s = []
+        for base, shard in zip(self.doc_base, self.shards):
+            if shard.n_docs == 0:
+                self.last_probe_s.append(0.0)
+                continue
+            t0 = time.perf_counter()
+            scores, cand = shard.scored_candidates(qs, q_mask)
+            self.last_probe_s.append(time.perf_counter() - t0)
+            if cand is None:            # corpus-wide slate: ids = columns
+                gids = np.broadcast_to(
+                    base + np.arange(shard.n_docs, dtype=np.int64),
+                    (Nq, shard.n_docs))
+            else:
+                gids = np.asarray(cand, np.int64) + base
+            slate_s.append(scores)
+            slate_i.append(gids)
+        if not slate_s:
+            return (np.full((Nq, k), -np.inf, np.float32),
+                    np.full((Nq, k), -1, np.int64))
+        merged = (slate_s[0] if len(slate_s) == 1
+                  else jnp.concatenate(slate_s, axis=1))
+        ids = (slate_i[0] if len(slate_i) == 1
+               else np.concatenate(slate_i, axis=1))
+        return topk_with_pads(merged, ids, k)
+
+    def search(self, q: np.ndarray, k: int = 10
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """q: [Lq, dim] -> (scores [k'], doc ids [k'])."""
+        S, I = self.search_batch(np.asarray(q, np.float32)[None], k=k)
+        valid = I[0] >= 0
+        return S[0][valid], I[0][valid]

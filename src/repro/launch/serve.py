@@ -15,7 +15,14 @@ the same code single-host.
 if the directory already holds a manifest the index is mmap-loaded from
 it — no document encoding, no index build, restart-to-serving in the
 cold-load time printed — otherwise the built index is saved there for
-the next restart.
+the next restart. Loading dispatches on the manifest kind, so the same
+flag serves monolithic AND sharded artifacts.
+
+``--shard-max-vectors N`` builds through the STREAMING path instead
+(retrieval/indexer.py): token batches are encoded+pooled incrementally
+and flushed to capped shards, so the build's host memory is O(shard).
+Sharded serving reports the per-shard probe time alongside the usual
+percentiles.
 """
 from __future__ import annotations
 
@@ -27,7 +34,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.persist import MANIFEST_NAME, artifact_bytes, load_index
+from repro.core.persist import (MANIFEST_NAME, artifact_bytes,
+                                load_artifact)
+from repro.core.sharded import ShardedIndex
 from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
 from repro.models.colbert import init_colbert
 from repro.retrieval.indexer import Indexer
@@ -71,6 +80,9 @@ def main(argv=None):
                     help="artifact directory: load the index from it if "
                          "a manifest exists (skip corpus encode + build), "
                          "otherwise build and save to it")
+    ap.add_argument("--shard-max-vectors", type=int, default=0,
+                    help="build via the streaming path, flushing a new "
+                         "shard every N pooled vectors (0 = monolithic)")
     args = ap.parse_args(argv)
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b]
     if not batch_sizes or any(b <= 0 for b in batch_sizes):
@@ -86,9 +98,12 @@ def main(argv=None):
         os.path.join(args.index_dir, MANIFEST_NAME)))
     if have_artifact:
         t0 = time.time()
-        index = load_index(args.index_dir, mmap=True)
+        index = load_artifact(args.index_dir, mmap=True)
         t_load = time.time() - t0
-        print(f"index: loaded {args.index_dir} — {index.n_docs} docs, "
+        kind = (f"{index.n_shards}-shard" if isinstance(index, ShardedIndex)
+                else "monolithic")
+        print(f"index: loaded {args.index_dir} ({kind}) — "
+              f"{index.n_docs} docs, "
               f"{artifact_bytes(args.index_dir) / 2**20:.1f} MiB on disk, "
               f"cold load {t_load * 1e3:.0f}ms (no encoder run)")
     else:
@@ -96,15 +111,22 @@ def main(argv=None):
         indexer = Indexer(params, cfg, pool_method=args.pool_method,
                           pool_factor=args.pool_factor,
                           backend=args.backend)
-        index, stats = indexer.build(
-            corpus.doc_token_batch(cfg.doc_maxlen - 2),
-            out_dir=args.index_dir)
+        toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+        if args.shard_max_vectors > 0:
+            index, stats = indexer.build_streaming(
+                toks, shard_max_vectors=args.shard_max_vectors,
+                out_dir=args.index_dir)
+        else:
+            index, stats = indexer.build(toks, out_dir=args.index_dir)
         t_build = time.time() - t0
+        shard_note = (f", {stats.n_shards} shards (peak buffer "
+                      f"{stats.peak_buffered_vectors} vectors)"
+                      if stats.n_shards > 1 else "")
         print(f"index: {stats.n_docs} docs, "
               f"{stats.n_vectors_stored} vectors "
               f"({stats.vector_reduction:.0%} reduction), "
               f"{stats.index_bytes / 2**20:.1f} MiB on disk, "
-              f"built in {t_build:.1f}s"
+              f"built in {t_build:.1f}s{shard_note}"
               + (f", saved to {args.index_dir}" if args.index_dir else ""))
 
     searcher = Searcher(params, cfg, index)
@@ -119,6 +141,10 @@ def main(argv=None):
         print(f"{bs:5d} {len(lat):7d} {qps:8.1f} "
               f"{np.percentile(lat_ms, 50):8.1f} "
               f"{np.percentile(lat_ms, 99):8.1f}")
+        if isinstance(index, ShardedIndex) and index.last_probe_s:
+            per = "  ".join(f"s{i}={t * 1e3:.1f}ms"
+                            for i, t in enumerate(index.last_probe_s))
+            print(f"      per-shard probe (last batch): {per}")
     return 0
 
 

@@ -70,8 +70,17 @@ class CascadeIndex:
 
     @classmethod
     def from_dir(cls, path: str, mmap: bool = True) -> "CascadeIndex":
+        """Load via the shared kind dispatcher (core/persist.py), so the
+        error for a non-cascade artifact names what the directory
+        actually holds instead of failing on missing payloads."""
         from repro.core import persist
-        return persist.load_cascade(path, mmap=mmap)
+        obj = persist.load_artifact(path, mmap=mmap)
+        if not isinstance(obj, cls):
+            raise persist.IndexFormatError(
+                f"{path!r} holds a {type(obj).__name__} artifact, not a "
+                f"CascadeIndex — load it with persist.load_artifact / "
+                f"Searcher.from_dir instead")
+        return obj
 
     def search_batch(self, qs: np.ndarray, k: int = 10
                      ) -> Tuple[np.ndarray, np.ndarray]:

@@ -7,6 +7,15 @@
   3. hand the per-document (compacted) vector lists to the chosen index
      backend (flat | hnsw | plaid).
 
+``Indexer.build_streaming`` is the same pipeline with bounded host
+memory: an ITERATOR of token batches is encoded+pooled batch by batch,
+and the pooled buffer is flushed into a new on-disk shard whenever
+``shard_max_vectors`` is hit — peak host footprint is O(shard), not
+O(corpus) (the prerequisite the pooled-footprint win needs to survive
+corpora bigger than RAM). Flushed shards are immediately saved and
+re-opened mmap'd, so the finished ``ShardedIndex`` holds file mappings,
+not buffers.
+
 Data-parallel posture: document batches are independent, so under pjit the
 encode+pool step shards on the ``data`` axis; the index build consumes the
 gathered host-side lists (index construction is host-bound bookkeeping).
@@ -17,7 +26,7 @@ import dataclasses
 import json
 import os
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Iterable, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +43,10 @@ class IndexStats:
     n_vectors_raw: int
     n_vectors_stored: int
     index_bytes: int     # real serialized artifact size (core/persist.py)
+    # streaming/sharded builds only (defaults keep monolithic stats stable)
+    n_shards: int = 1
+    peak_buffered_vectors: int = 0   # host-buffer high-water mark
+    max_batch_vectors: int = 0       # largest single encode-batch yield
 
     @property
     def vector_reduction(self) -> float:
@@ -60,6 +73,18 @@ class Indexer:
         self.backend = backend or cfg.index_backend
         self.encode_batch = encode_batch
         self.index_kw = index_kw
+
+    def _index_kw(self) -> dict:
+        """Index construction knobs: config defaults, overridden by the
+        explicit ``**index_kw`` — ONE definition for both build paths
+        (monolithic and streaming must construct identical indexes)."""
+        kw = dict(doc_maxlen=self.cfg.doc_maxlen,
+                  n_centroids=self.cfg.n_centroids,
+                  quant_bits=self.cfg.quant_bits,
+                  nprobe=self.cfg.nprobe, t_cs=self.cfg.t_cs,
+                  ndocs=self.cfg.ndocs)
+        kw.update(self.index_kw)        # explicit kwargs override config
+        return kw
 
     def encode_and_pool(self, doc_tokens: np.ndarray) -> List[np.ndarray]:
         """doc_tokens [N, L] -> list of per-doc pooled vector arrays."""
@@ -95,14 +120,8 @@ class Indexer:
         from repro.core.persist import artifact_bytes, serialized_nbytes
         doc_vecs = self.encode_and_pool(doc_tokens)
         raw = self._raw_vector_count(doc_tokens)
-        kw = dict(doc_maxlen=self.cfg.doc_maxlen,
-                  n_centroids=self.cfg.n_centroids,
-                  quant_bits=self.cfg.quant_bits,
-                  nprobe=self.cfg.nprobe, t_cs=self.cfg.t_cs,
-                  ndocs=self.cfg.ndocs)
-        kw.update(self.index_kw)        # explicit kwargs override config
         index = MultiVectorIndex(dim=self.cfg.proj_dim,
-                                 backend=self.backend, **kw)
+                                 backend=self.backend, **self._index_kw())
         index.add(doc_vecs)
         if out_dir is not None:
             manifest = index.save(out_dir, extra_meta={
@@ -121,6 +140,107 @@ class Indexer:
             with open(os.path.join(out_dir, "stats.json"), "w") as fh:
                 json.dump(stats.to_json(), fh, indent=2)
         return index, stats
+
+    # ------------------------------------------------------------- streaming
+    def build_streaming(self, token_batches: Iterable[np.ndarray],
+                        shard_max_vectors: int,
+                        out_dir: Optional[str] = None):
+        """Bounded-memory build: token-batch stream -> capped shards.
+
+        Args:
+          token_batches: iterable of [n_b, L] doc-token arrays (a single
+            [N, L] array is accepted and split into encode batches).
+          shard_max_vectors: flush a shard once the pooled buffer holds
+            at least this many vectors. Peak host memory is bounded by
+            ``shard_max_vectors`` plus one encode batch's yield (docs
+            are atomic; the flush check runs after each batch) — the
+            realized bound is reported as
+            ``IndexStats.peak_buffered_vectors``.
+          out_dir: when given, every flushed shard is saved to
+            ``out_dir/shard_XXXXX`` and REOPENED mmap'd — the buffer's
+            bytes move to disk at flush, and the root manifest +
+            aggregated ``stats.json`` are published at the end. Without
+            it the shards stay host-resident (still capped per shard).
+
+        Returns (ShardedIndex, IndexStats) — stats aggregated across
+        shards, ids global and contiguous in stream order.
+        """
+        from repro.core.persist import (_shard_dirname, artifact_bytes,
+                                        finalize_sharded)
+        from repro.core.sharded import ShardedIndex
+
+        assert shard_max_vectors > 0, shard_max_vectors
+        if isinstance(token_batches, np.ndarray):
+            arr, B = token_batches, self.encode_batch
+            token_batches = (arr[lo:lo + B]
+                             for lo in range(0, len(arr), B))
+        sharded = ShardedIndex(dim=self.cfg.proj_dim, backend=self.backend,
+                               shard_max_vectors=shard_max_vectors,
+                               **self._index_kw())
+
+        buffer: List[np.ndarray] = []
+        buffered = 0
+        raw = 0
+        peak = 0
+        max_batch = 0
+
+        def flush(docs_group: List[np.ndarray]) -> None:
+            shard = sharded._new_shard()
+            shard.add(docs_group)
+            if out_dir is not None:
+                # bytes leave the host: save, drop, reopen memory-mapped
+                sub = os.path.join(out_dir,
+                                   _shard_dirname(sharded.n_shards - 1))
+                shard.save(sub)
+                sharded.shards[-1] = MultiVectorIndex.load(sub, mmap=True)
+
+        for batch in token_batches:
+            batch = np.asarray(batch)
+            if batch.size == 0:
+                continue
+            docs = self.encode_and_pool(batch)
+            raw += self._raw_vector_count(batch)
+            got = sum(len(d) for d in docs)
+            max_batch = max(max_batch, got)
+            buffer.extend(docs)
+            buffered += got
+            peak = max(peak, buffered)
+            while buffered >= shard_max_vectors:
+                # split off one shard's worth; docs are atomic, so the
+                # first doc always goes in and the shard never splits one
+                take, used = 0, 0
+                while take < len(buffer):
+                    nxt = used + len(buffer[take])
+                    if take and nxt > shard_max_vectors:
+                        break
+                    used, take = nxt, take + 1
+                flush(buffer[:take])
+                buffer = buffer[take:]
+                buffered -= used
+        if buffer:
+            flush(buffer)
+
+        if out_dir is not None:
+            manifest = finalize_sharded(sharded, out_dir, extra_meta={
+                "pool": {"method": self.pool_method,
+                         "factor": self.pool_factor}})
+            index_bytes = artifact_bytes(manifest)
+        else:
+            from repro.core.persist import serialized_nbytes
+            index_bytes = sum(serialized_nbytes(s) for s in sharded.shards)
+        stats = IndexStats(
+            n_docs=sharded.n_docs,
+            n_vectors_raw=raw,
+            n_vectors_stored=sharded.n_vectors(),
+            index_bytes=index_bytes,
+            n_shards=sharded.n_shards,
+            peak_buffered_vectors=peak,
+            max_batch_vectors=max_batch,
+        )
+        if out_dir is not None:
+            with open(os.path.join(out_dir, "stats.json"), "w") as fh:
+                json.dump(stats.to_json(), fh, indent=2)
+        return sharded, stats
 
     def _raw_vector_count(self, doc_tokens: np.ndarray) -> int:
         """Unpooled emitted-vector count (for Table 3 reductions)."""

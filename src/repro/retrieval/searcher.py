@@ -23,7 +23,9 @@ from repro.models.colbert import encode_queries
 
 class Searcher:
     def __init__(self, params, cfg: ColbertConfig,
-                 index: MultiVectorIndex, encode_batch: int = 64):
+                 index, encode_batch: int = 64):
+        # index: anything with the batched two-stage search interface —
+        # MultiVectorIndex, ShardedIndex, or CascadeIndex
         self.params = params
         self.cfg = cfg
         self.index = index
@@ -33,8 +35,13 @@ class Searcher:
     def from_dir(cls, params, cfg: ColbertConfig, path: str,
                  mmap: bool = True, encode_batch: int = 64) -> "Searcher":
         """Serve a persisted index artifact: no corpus encode, no index
-        build — the document payloads stay on disk until first search."""
-        return cls(params, cfg, MultiVectorIndex.load(path, mmap=mmap),
+        build — the document payloads stay on disk until first search.
+
+        Dispatches on the artifact's manifest ``kind``, so monolithic
+        and sharded (and cascade) index directories serve through the
+        same API."""
+        from repro.core.persist import load_artifact
+        return cls(params, cfg, load_artifact(path, mmap=mmap),
                    encode_batch=encode_batch)
 
     def encode(self, query_tokens: np.ndarray) -> np.ndarray:

@@ -1,0 +1,84 @@
+"""Mask-aware sequential pooling + vectorized compact_pooled.
+
+Separate from test_pooling.py on purpose: that module is gated on
+``hypothesis`` (absent in some containers) and these pins must always
+run — they lock the stored-vector counts the paper's Table 3 reductions
+are computed from.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.pooling import (compact_pooled, pool_doc_embeddings,
+                                sequential_assign)
+
+
+def _gappy_mask(rng, B, N, frac_valid=0.7):
+    mask = rng.random((B, N)) < frac_valid
+    mask[:, 0] = True                      # at least one valid token/doc
+    return mask
+
+
+@pytest.mark.parametrize("factor", [2, 3, 4, 6])
+def test_sequential_pooled_count_is_ceil_valid_over_factor(factor):
+    """THE pin: a doc with n valid tokens stores exactly ceil(n/f)
+    sequential-pooled vectors, however its punctuation gaps fall."""
+    rng = np.random.default_rng(factor)
+    B, N, d = 5, 48, 8
+    x = rng.normal(size=(B, N, d)).astype(np.float32)
+    mask = _gappy_mask(rng, B, N)
+    _, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                   factor, "sequential")
+    counts = np.asarray(pmask).sum(axis=1)
+    valid = mask.sum(axis=1)
+    np.testing.assert_array_equal(counts, -(-valid // factor))
+
+
+def test_sequential_assign_groups_span_gaps():
+    """Valid tokens group by RANK: a gap inside a run must not split it."""
+    mask = np.array([[1, 0, 1, 1, 0, 1, 1, 0]], bool)
+    assign = np.asarray(sequential_assign(jnp.asarray(mask), 2))
+    # valid ranks 0..4 -> groups [0, 0, 1, 1, 2] at the valid positions
+    np.testing.assert_array_equal(assign[0][mask[0]], [0, 0, 1, 1, 2])
+
+
+@pytest.mark.parametrize("factor", [2, 3])
+def test_sequential_masked_equals_gapfree_equivalent(factor):
+    """Pooling a gappy doc == pooling its compacted (gap-free) twin."""
+    rng = np.random.default_rng(7)
+    N, d = 32, 8
+    x = rng.normal(size=(1, N, d)).astype(np.float32)
+    mask = _gappy_mask(rng, 1, N, frac_valid=0.6)
+    a = compact_pooled(*pool_doc_embeddings(
+        jnp.asarray(x), jnp.asarray(mask), factor, "sequential"))[0]
+    packed = np.zeros_like(x)
+    nv = int(mask.sum())
+    packed[0, :nv] = x[0][mask[0]]
+    pmask = np.arange(N)[None, :] < nv
+    b = compact_pooled(*pool_doc_embeddings(
+        jnp.asarray(packed), jnp.asarray(pmask), factor, "sequential"))[0]
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["sequential", "kmeans", "ward"])
+def test_compact_pooled_matches_loop_reference(method):
+    rng = np.random.default_rng(3)
+    B, N, d = 4, 24, 8
+    x = rng.normal(size=(B, N, d)).astype(np.float32)
+    mask = _gappy_mask(rng, B, N)
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                        3, method)
+    got = compact_pooled(pooled, pmask)
+    p, m = np.asarray(pooled), np.asarray(pmask)
+    want = [p[b][m[b]] for b in range(B)]
+    assert len(got) == B
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_compact_pooled_edge_shapes():
+    assert compact_pooled(np.zeros((0, 4, 8)), np.zeros((0, 4), bool)) == []
+    out = compact_pooled(np.ones((2, 3, 4)), np.zeros((2, 3), bool))
+    assert [len(o) for o in out] == [0, 0]
+    one = compact_pooled(np.ones((1, 3, 4)), np.ones((1, 3), bool))
+    assert len(one) == 1 and one[0].shape == (3, 4)

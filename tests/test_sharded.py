@@ -1,0 +1,283 @@
+"""ShardedIndex: shard-merge parity with the monolithic index, doc-id
+routing, persistence dispatch, and the bounded-memory streaming build.
+
+Parity regime: every backend's candidate stage is made exhaustive
+(generous hnsw_candidates / nprobe / ndocs) and plaid shares ONE codec
+across shards and with the monolithic reference — under that contract
+``ShardedIndex.search_batch`` must equal the monolithic result exactly
+(ids AND scores), which is the acceptance bar for the sharded engine.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.index import MultiVectorIndex
+from repro.core.persist import IndexFormatError, artifact_bytes, load_artifact
+from repro.core.sharded import ShardedIndex
+
+BACKENDS = ["flat", "hnsw", "plaid"]
+KW = dict(doc_maxlen=24, n_centroids=16, ndocs=4096, hnsw_candidates=8192)
+DIM = 16
+
+
+def unit_docs(rng, n=40, dim=DIM, lo=4, hi=20):
+    docs = []
+    for _ in range(n):
+        v = rng.normal(size=(rng.integers(lo, hi), dim)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    return docs
+
+
+def unit_queries(rng, n=6, lq=5, dim=DIM):
+    q = rng.normal(size=(n, lq, dim)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def build_pair(backend, docs, cap=160):
+    """(sharded, monolithic) over the same corpus, one codec for plaid."""
+    sharded = ShardedIndex(dim=DIM, backend=backend,
+                           shard_max_vectors=cap, **KW)
+    sharded.add(docs)
+    mono = MultiVectorIndex(dim=DIM, backend=backend, **KW)
+    if backend == "plaid":
+        mono.set_codec(sharded.codec())
+    mono.add(docs)
+    return sharded, mono
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_matches_monolithic_exactly(backend):
+    rng = np.random.default_rng(0)
+    docs, qs = unit_docs(rng), unit_queries(rng)
+    sharded, mono = build_pair(backend, docs)
+    assert sharded.n_shards >= 2            # the cap actually sharded it
+    assert sharded.n_docs == mono.n_docs
+    assert sharded.n_vectors() == mono.n_vectors()
+    S1, I1 = sharded.search_batch(qs, k=8)
+    S0, I0 = mono.search_batch(qs, k=8)
+    np.testing.assert_array_equal(I0, I1)
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_delete_parity(backend):
+    rng = np.random.default_rng(1)
+    docs, qs = unit_docs(rng), unit_queries(rng)
+    sharded, mono = build_pair(backend, docs)
+    victims = [0, 13, 25, 39]               # spread across shards
+    sharded.delete(victims)
+    mono.delete(victims)
+    S1, I1 = sharded.search_batch(qs, k=10)
+    S0, I0 = mono.search_batch(qs, k=10)
+    np.testing.assert_array_equal(I0, I1)
+    assert not np.isin(I1[I1 >= 0], victims).any()
+
+
+def test_tie_break_order_matches_monolithic():
+    """Duplicate docs across a shard boundary score identically; the
+    merged top-k must order them lowest-global-id-first, like the
+    monolithic engine does."""
+    rng = np.random.default_rng(2)
+    base = unit_docs(rng, n=6, lo=5, hi=9)
+    docs = base + base                      # ids 0..5 == ids 6..11
+    qs = unit_queries(rng, n=4)
+    sharded = ShardedIndex(dim=DIM, backend="flat",
+                           shard_max_vectors=sum(len(d) for d in base),
+                           **KW)
+    sharded.add(docs)
+    assert sharded.n_shards == 2
+    mono = MultiVectorIndex(dim=DIM, backend="flat", **KW)
+    mono.add(docs)
+    S1, I1 = sharded.search_batch(qs, k=12)
+    S0, I0 = mono.search_batch(qs, k=12)
+    np.testing.assert_array_equal(I0, I1)
+    # each dup pair is adjacent with the low id first
+    for row in np.asarray(I1):
+        pos = {int(d): i for i, d in enumerate(row)}
+        for d in range(6):
+            assert pos[d] == pos[d + 6] - 1, row
+
+
+def test_empty_shard_is_skipped():
+    rng = np.random.default_rng(3)
+    docs, qs = unit_docs(rng, n=12), unit_queries(rng)
+    a = MultiVectorIndex(dim=DIM, backend="flat", **KW)
+    a.add(docs[:7])
+    hole = MultiVectorIndex(dim=DIM, backend="flat", **KW)
+    b = MultiVectorIndex(dim=DIM, backend="flat", **KW)
+    b.add(docs[7:])
+    sharded = ShardedIndex.from_parts([a, hole, b], [0, 7, 7])
+    mono = MultiVectorIndex(dim=DIM, backend="flat", **KW)
+    mono.add(docs)
+    S1, I1 = sharded.search_batch(qs, k=5)
+    S0, I0 = mono.search_batch(qs, k=5)
+    np.testing.assert_array_equal(I0, I1)
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_doc_and_empty_index(backend):
+    rng = np.random.default_rng(4)
+    qs = unit_queries(rng, n=3)
+    empty = ShardedIndex(dim=DIM, backend=backend, **KW)
+    S, I = empty.search_batch(qs, k=4)
+    assert (I == -1).all() and np.isneginf(S).all()
+    one = ShardedIndex(dim=DIM, backend=backend, shard_max_vectors=8, **KW)
+    ids = one.add(unit_docs(rng, n=1, lo=5, hi=9))
+    np.testing.assert_array_equal(ids, [0])
+    S, I = one.search_batch(qs, k=4)
+    assert (I[:, 0] == 0).all()
+    assert (I[:, 1:] == -1).all()
+
+
+# ------------------------------------------------------------ id routing
+def test_add_spills_and_ids_are_global():
+    rng = np.random.default_rng(5)
+    docs = unit_docs(rng, n=30, lo=6, hi=12)
+    sharded = ShardedIndex(dim=DIM, backend="flat",
+                           shard_max_vectors=50, **KW)
+    ids = sharded.add(docs)
+    np.testing.assert_array_equal(ids, np.arange(30))
+    assert sharded.n_shards >= 3
+    # every shard honors the cap up to one atomic doc
+    for s in sharded.shards:
+        assert s.n_vectors() <= 50 + 12
+    # shard_of maps ranges consistently
+    owner = sharded.shard_of(np.arange(30))
+    assert (np.diff(owner) >= 0).all()
+    for s in range(sharded.n_shards):
+        assert (owner == s).sum() == sharded.shards[s].n_docs
+    with pytest.raises(IndexError):
+        sharded.shard_of([30])
+
+
+def test_incremental_add_continues_ids_and_matches_bulk():
+    rng = np.random.default_rng(6)
+    docs = unit_docs(rng, n=20, lo=6, hi=12)
+    qs = unit_queries(rng)
+    bulk = ShardedIndex(dim=DIM, backend="flat", shard_max_vectors=60, **KW)
+    bulk.add(docs)
+    inc = ShardedIndex(dim=DIM, backend="flat", shard_max_vectors=60, **KW)
+    got = [inc.add(docs[i:i + 3]) for i in range(0, 20, 3)]
+    np.testing.assert_array_equal(np.concatenate(got), np.arange(20))
+    S0, I0 = bulk.search_batch(qs, k=6)
+    S1, I1 = inc.search_batch(qs, k=6)
+    np.testing.assert_array_equal(I0, I1)
+
+
+# ------------------------------------------------------------ persistence
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_save_load_roundtrip(backend, tmp_path):
+    rng = np.random.default_rng(7)
+    docs, qs = unit_docs(rng), unit_queries(rng)
+    sharded, _ = build_pair(backend, docs)
+    sharded.delete([2, 21])
+    S0, I0 = sharded.search_batch(qs, k=8)
+    manifest = sharded.save(tmp_path / "root")
+    assert manifest["kind"] == "sharded_index"
+    loaded = load_artifact(tmp_path / "root", mmap=True)
+    assert isinstance(loaded, ShardedIndex)
+    assert loaded.n_shards == sharded.n_shards
+    assert loaded.n_docs == sharded.n_docs
+    S1, I1 = loaded.search_batch(qs, k=8)
+    np.testing.assert_array_equal(I0, I1)
+    np.testing.assert_allclose(np.asarray(S0), np.asarray(S1),
+                               rtol=1e-5, atol=1e-6)
+    # root bytes == sum of shard payload bytes, and > 0
+    total = artifact_bytes(tmp_path / "root")
+    per_shard = sum(artifact_bytes(os.path.join(tmp_path, "root", e["dir"]))
+                    for e in manifest["shards"])
+    assert total == per_shard > 0
+
+
+def test_load_artifact_dispatches_on_kind(tmp_path):
+    rng = np.random.default_rng(8)
+    docs = unit_docs(rng, n=10)
+    mono = MultiVectorIndex(dim=DIM, backend="flat", **KW)
+    mono.add(docs)
+    mono.save(tmp_path / "mono")
+    assert isinstance(load_artifact(tmp_path / "mono"), MultiVectorIndex)
+
+    sharded = ShardedIndex(dim=DIM, backend="flat",
+                           shard_max_vectors=40, **KW)
+    sharded.add(docs)
+    sharded.save(tmp_path / "sharded")
+    assert isinstance(load_artifact(tmp_path / "sharded"), ShardedIndex)
+
+    from repro.retrieval.cascade import CascadeIndex
+    cascade = CascadeIndex(dim=DIM, doc_maxlen=24)
+    cascade.add(docs[:4], docs[:4])
+    cascade.save(tmp_path / "cascade")
+    assert isinstance(load_artifact(tmp_path / "cascade"), CascadeIndex)
+    assert isinstance(CascadeIndex.from_dir(tmp_path / "cascade"),
+                      CascadeIndex)
+    with pytest.raises(IndexFormatError):
+        CascadeIndex.from_dir(tmp_path / "sharded")
+    with pytest.raises(IndexFormatError):
+        ShardedIndex.load(tmp_path / "mono")
+
+
+def test_empty_sharded_roundtrip(tmp_path):
+    empty = ShardedIndex(dim=DIM, backend="plaid", shard_max_vectors=64,
+                         **KW)
+    empty.save(tmp_path / "empty")
+    loaded = load_artifact(tmp_path / "empty")
+    assert isinstance(loaded, ShardedIndex)
+    assert loaded.n_docs == 0 and loaded.backend == "plaid"
+    assert loaded.shard_max_vectors == 64
+
+
+# -------------------------------------------------------- streaming build
+def test_streaming_build_bounded_and_parity(tmp_path):
+    """The acceptance scenario end to end with the real encoder: a cap
+    smaller than the corpus yields >=2 shards, the pooled buffer never
+    exceeds cap + one encode batch, and the artifact re-serves the same
+    results through Searcher.from_dir."""
+    import jax
+    from dataclasses import replace
+    from repro.configs import get_smoke_config
+    from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+    from repro.models.colbert import init_colbert
+    from repro.retrieval.indexer import Indexer
+    from repro.retrieval.searcher import Searcher
+
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = replace(DATASET_SPECS["scifact"], n_docs=24, n_queries=3)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+
+    cap = 140
+    indexer = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                      backend="flat", encode_batch=8)
+    sharded, stats = indexer.build_streaming(
+        toks, shard_max_vectors=cap, out_dir=str(tmp_path / "art"))
+    assert stats.n_shards >= 2
+    assert stats.n_docs == 24
+    assert stats.peak_buffered_vectors <= cap + stats.max_batch_vectors
+    for s in sharded.shards[:-1]:
+        assert s.n_vectors() <= cap + cfg.doc_maxlen
+    # monolithic build over the same corpus: same docs, same vectors
+    mono, mono_stats = Indexer(params, cfg, pool_method="ward",
+                               pool_factor=2, backend="flat",
+                               encode_batch=8).build(toks)
+    assert stats.n_vectors_stored == mono_stats.n_vectors_stored
+    assert stats.n_vectors_raw == mono_stats.n_vectors_raw
+
+    q_toks = corpus.query_token_batch(cfg.query_maxlen - 2)
+    served = Searcher.from_dir(params, cfg, str(tmp_path / "art"))
+    assert isinstance(served.index, ShardedIndex)
+    S1, I1 = served.search(q_toks, k=5)
+    S0, I0 = Searcher(params, cfg, mono).search(q_toks, k=5)
+    np.testing.assert_array_equal(I0, I1)
+    np.testing.assert_allclose(np.asarray(S0), np.asarray(S1),
+                               rtol=1e-5, atol=1e-6)
+    assert len(served.index.last_probe_s) == served.index.n_shards
+    # aggregated stats landed beside the root manifest
+    import json
+    with open(tmp_path / "art" / "stats.json") as fh:
+        js = json.load(fh)
+    assert js["n_shards"] == stats.n_shards
+    assert js["peak_buffered_vectors"] == stats.peak_buffered_vectors

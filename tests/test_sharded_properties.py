@@ -1,0 +1,87 @@
+"""Property tests: shard-merge parity across backend x pool method.
+
+Documents are produced by the REAL pooling stage (random embeddings ->
+pool_doc_embeddings -> compact_pooled) so every pool method's output
+geometry — short docs, variable lengths, renormalized means — feeds the
+sharded engine; then a 2-4 shard ShardedIndex must return exactly the
+monolithic ids and scores (exhaustive-candidate regime, shared plaid
+codec — the parity contract in core/sharded.py).
+
+Gated on ``hypothesis`` (PR 1 convention: skip, don't fail, in
+containers without it; CI installs it).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+import jax.numpy as jnp
+
+from repro.core.index import MultiVectorIndex
+from repro.core.pooling import compact_pooled, pool_doc_embeddings
+from repro.core.sharded import ShardedIndex
+
+# dim must satisfy the residual packer's dim % (32 / bits) == 0
+DIM = 16
+KW = dict(doc_maxlen=24, n_centroids=8, ndocs=4096, hnsw_candidates=8192)
+
+
+def pooled_corpus(seed, n_docs, method, factor):
+    rng = np.random.default_rng(seed)
+    N = 20
+    x = rng.normal(size=(n_docs, N, DIM)).astype(np.float32)
+    lens = rng.integers(4, N + 1, size=n_docs)
+    mask = np.arange(N)[None, :] < lens[:, None]
+    pooled, pmask = pool_doc_embeddings(jnp.asarray(x), jnp.asarray(mask),
+                                        factor, method)
+    docs = compact_pooled(pooled, pmask)
+    qs = rng.normal(size=(4, 5, DIM)).astype(np.float32)
+    return docs, qs / np.linalg.norm(qs, axis=-1, keepdims=True)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_docs=st.integers(6, 24),
+       n_shards=st.integers(2, 4),
+       backend=st.sampled_from(["flat", "hnsw", "plaid"]),
+       method=st.sampled_from(["sequential", "kmeans", "ward"]),
+       factor=st.sampled_from([1, 2, 4]))
+def test_sharded_equals_monolithic(seed, n_docs, n_shards, backend,
+                                   method, factor):
+    docs, qs = pooled_corpus(seed, n_docs, method, factor)
+    total = sum(len(d) for d in docs)
+    cap = max(total // n_shards, max(len(d) for d in docs), 1)
+    sharded = ShardedIndex(dim=DIM, backend=backend,
+                           shard_max_vectors=cap, **KW)
+    ids = sharded.add(docs)
+    np.testing.assert_array_equal(ids, np.arange(n_docs))
+    mono = MultiVectorIndex(dim=DIM, backend=backend, **KW)
+    if backend == "plaid":
+        mono.set_codec(sharded.codec())
+    mono.add(docs)
+    S1, I1 = sharded.search_batch(qs, k=min(8, n_docs))
+    S0, I0 = mono.search_batch(qs, k=min(8, n_docs))
+    np.testing.assert_array_equal(I0, I1)
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_docs=st.integers(4, 16),
+       backend=st.sampled_from(["flat", "plaid"]))
+def test_sharded_delete_then_parity(seed, n_docs, backend):
+    docs, qs = pooled_corpus(seed, n_docs, "ward", 2)
+    total = sum(len(d) for d in docs)
+    cap = max(total // 3, max(len(d) for d in docs), 1)
+    sharded = ShardedIndex(dim=DIM, backend=backend,
+                           shard_max_vectors=cap, **KW)
+    sharded.add(docs)
+    mono = MultiVectorIndex(dim=DIM, backend=backend, **KW)
+    if backend == "plaid":
+        mono.set_codec(sharded.codec())
+    mono.add(docs)
+    victims = list(range(0, n_docs, 3))
+    sharded.delete(victims)
+    mono.delete(victims)
+    S1, I1 = sharded.search_batch(qs, k=n_docs)
+    S0, I0 = mono.search_batch(qs, k=n_docs)
+    np.testing.assert_array_equal(I0, I1)
+    assert not np.isin(np.asarray(I1)[np.asarray(I1) >= 0], victims).any()
