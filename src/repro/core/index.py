@@ -300,6 +300,94 @@ class MultiVectorIndex:
             return self._rerank_dense(qs, cand, cand_mask, q_mask), None
         return self.rerank(qs, cand, cand_mask, q_mask), cand
 
+    def warm_shapes(self, qs: np.ndarray, k: int = 10) -> None:
+        """Pre-compile every executable a serving stream at this query
+        batch shape can hit — including the CANDIDATE-width axis.
+
+        ``search_batch`` shapes depend on data: stage 1 yields a padded
+        candidate matrix whose width C is the geometric ladder
+        {32, 64, 128, ...} (``pad_candidate_sets``) or the dense
+        corpus-wide path once C reaches ``n_docs``. A width first seen
+        mid-stream costs an XLA compile (hundreds of ms on CPU) that
+        lands straight in some query's tail latency. Serving runtimes
+        (launch/engine.py) call this at warmup per shape bucket so the
+        whole ladder is traced before traffic."""
+        qs = np.asarray(qs, np.float32)
+        if self.n_docs == 0:
+            return
+        self.search_batch(qs, k=k)          # stage-1 + one organic path
+        if self.backend == "flat":
+            return                          # dense only: already warm
+        # Reachable widths only: the geometric pad ladder up to the
+        # stage-1 candidate budget (plaid: ndocs before the prune caps
+        # it; hnsw: the token-probe hit bound), plus plaid's pruned
+        # width (block-padded ndocs — NOT a ladder value in general).
+        # Widths >= n_docs dispatch to the dense path instead.
+        Nq = len(qs)
+        block = 32                          # pad_candidate_sets block
+        if self.backend == "plaid":
+            cap = min(self.n_docs, self.ndocs)
+        else:
+            Lq = max(qs.shape[1], 1)
+            per_tok = max(self.hnsw_candidates // Lq, 8)
+            cap = min(self.n_docs, per_tok * Lq)
+        widths = set()
+        C = block
+        while C < cap:
+            widths.add(C)
+            C <<= 1
+        widths.add(C)                       # first ladder value >= cap
+        if self.backend == "plaid":         # post-prune width
+            widths.add(-(-min(self.ndocs, self.n_docs) // block) * block)
+        for C in sorted(widths):
+            if C >= self.n_docs:
+                continue                    # served by the dense path
+            cand = np.zeros((Nq, C), np.int64)   # doc 0: shape-only work
+            mask = np.ones((Nq, C), bool)
+            scores = self.rerank(qs, cand, mask)
+            topk_with_pads(scores, cand, k)
+        if self.backend == "plaid" and self._plaid is not None:
+            self._warm_plaid_prune(qs)
+        if max(widths) >= self.n_docs:
+            # dense corpus-wide fallback is reachable (a candidate set
+            # can grow to corpus width) — warm it too; when the budget
+            # caps far below n_docs, skip: it would materialize the
+            # whole padded corpus for an executable traffic never hits
+            scores = self.rerank(qs, None, None)
+            topk_with_pads(scores, None, k)
+
+    def _warm_plaid_prune(self, qs: np.ndarray) -> None:
+        """Trace plaid's PRE-prune stage-3 shapes for this batch shape.
+
+        When the IVF gather exceeds ``ndocs``, ``plaid_candidates``
+        scores candidates centroid-only at the GATHER width — ladder
+        values above ``ndocs`` — before pruning; those executables are
+        not touched by the rerank ladder warm, so drive them here."""
+        import jax
+        from repro.core.plaid import (_approx_scores_batch,
+                                      _centroid_scores_batch)
+        p = self._plaid
+        Nq = len(qs)
+        block = 32
+        cs = _centroid_scores_batch(jnp.asarray(qs, jnp.float32),
+                                    jnp.asarray(p.codec.centroids))
+        codes, tok_mask = p.padded_codes()
+        # gather ladder: 32<<m up to the first value >= n_docs (counts
+        # are capped by live docs, but the geometric pad can overshoot)
+        C = block
+        while True:
+            if C > self.ndocs:              # prune engages above budget
+                cand = jnp.zeros((Nq, C), jnp.int64)
+                cmask = jnp.ones((Nq, C), bool)
+                approx = _approx_scores_batch(
+                    cs, jnp.take(codes, cand, axis=0),
+                    jnp.take(tok_mask, cand, axis=0) & cmask[:, :, None],
+                    cmask, self.t_cs)
+                jax.lax.top_k(approx, min(self.ndocs, C))
+            if C >= self.n_docs:
+                break
+            C <<= 1
+
     # ----------------------------------------------------------------- search
     def search_batch(self, qs: np.ndarray, k: int = 10,
                      q_mask: Optional[np.ndarray] = None

@@ -65,6 +65,21 @@ def _require(mapping: Dict[str, Any], key: str, where: str) -> Any:
     return mapping[key]
 
 
+def artifact_generation(path: str) -> int:
+    """Monotonic publish counter of the artifact at ``path``.
+
+    Every ``write_artifact`` over the same directory bumps it, so a
+    serving process can poll this (O(one small json read)) to notice a
+    rebuilt index and hot-swap it in (launch/engine.py). Returns 0 when
+    no readable manifest exists — generations start at 1.
+    """
+    try:
+        with open(os.path.join(path, MANIFEST_NAME)) as fh:
+            return int(json.load(fh).get("generation", 0))
+    except (OSError, ValueError, json.JSONDecodeError):
+        return 0
+
+
 def write_artifact(path: str, meta: Dict[str, Any],
                    payloads: Dict[str, np.ndarray]) -> Dict[str, Any]:
     """Write payload .npy files + manifest.json; returns the manifest.
@@ -76,8 +91,15 @@ def write_artifact(path: str, meta: Dict[str, Any],
     only after it is published. A crash at any point leaves the
     previously-published version fully loadable (plus, at worst, some
     orphaned payload files the next successful save sweeps up).
+
+    Each publish carries a monotonic ``generation`` (previous
+    generation in the directory + 1, or an explicit value passed in
+    ``meta``): index watchers key hot swaps off it, and the manifest
+    rename above is what makes a generation flip atomic.
     """
     os.makedirs(path, exist_ok=True)
+    generation = int(meta.get("generation",
+                              artifact_generation(path) + 1))
     token = uuid.uuid4().hex[:8]
     table = {}
     for name, arr in payloads.items():
@@ -91,6 +113,7 @@ def write_artifact(path: str, meta: Dict[str, Any],
                        "shape": list(arr.shape), "bytes": int(arr.nbytes)}
     manifest = dict(meta)
     manifest["format_version"] = FORMAT_VERSION
+    manifest["generation"] = generation
     manifest["payloads"] = table
     tmp = os.path.join(path, MANIFEST_NAME + ".tmp")
     with open(tmp, "w") as fh:

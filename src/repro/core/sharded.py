@@ -30,12 +30,20 @@ ndocs generous) and — for plaid — one codec shared across shards
 first shard), ``search_batch`` returns exactly the monolithic result:
 same ids, same scores, same tie order.
 
-Per-shard probe times from the last ``search_batch`` are kept in
-``last_probe_s`` (serve.py reports them per shard).
+Shard probing fans out on a thread pool (``probe_threads``): stage 1 is
+host-bound numpy for hnsw/plaid, so K shards probe concurrently while
+the merge stays deterministic — slates are collected back in shard
+order, so results are identical to the sequential fan-out. Per-shard
+probe times are returned per call by ``search_batch_with_stats``
+(concurrent batches each get their own timings); ``last_probe_s`` keeps
+the last call's timings as a convenience snapshot, written in one
+atomic assignment so a concurrent reader never sees a half-built list.
 """
 from __future__ import annotations
 
+import os
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -64,6 +72,13 @@ class ShardedIndex:
         self.shards: List[MultiVectorIndex] = []
         self.doc_base: List[int] = []
         self.last_probe_s: List[float] = []
+        self.probe_threads = min(8, os.cpu_count() or 1)
+        # created eagerly (no threads spawn until first submit) so
+        # concurrent first searches can't race a lazy init; close()
+        # releases the workers when the index is retired
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(self.probe_threads, 1),
+            thread_name_prefix="shard-probe")
 
     @classmethod
     def from_parts(cls, shards: Sequence[MultiVectorIndex],
@@ -191,48 +206,92 @@ class ShardedIndex:
         return persist.load_sharded(path, mmap=mmap)
 
     # ----------------------------------------------------------------- search
+    def warm_shapes(self, qs: np.ndarray, k: int = 10) -> None:
+        """Pre-compile the candidate-width ladder on every shard plus
+        the merged top-k for this batch shape (serving warmup)."""
+        for shard in self.shards:
+            shard.warm_shapes(qs, k=k)
+        self.search_batch(qs, k=k)
+
+    def _probe_shard(self, base: int, shard: MultiVectorIndex,
+                     qs: np.ndarray, q_mask, Nq: int):
+        """One shard's scored slate with GLOBAL ids, plus its probe wall
+        time — the unit the thread pool fans out."""
+        t0 = time.perf_counter()
+        scores, cand = shard.scored_candidates(qs, q_mask)
+        dt = time.perf_counter() - t0
+        if cand is None:                # corpus-wide slate: ids = columns
+            gids = np.broadcast_to(
+                base + np.arange(shard.n_docs, dtype=np.int64),
+                (Nq, shard.n_docs))
+        else:
+            gids = np.asarray(cand, np.int64) + base
+        return scores, gids, dt
+
+    def close(self) -> None:
+        """Release the probe thread pool (idempotent). Called when a
+        serving runtime retires a hot-swapped-out generation — without
+        it, every swapped-in sharded index would leak its workers for
+        the life of the process."""
+        self._pool.shutdown(wait=False)
+
+    def search_batch_with_stats(
+            self, qs: np.ndarray, k: int = 10,
+            q_mask: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray, List[float]]:
+        """``search_batch`` plus this call's per-shard probe seconds.
+
+        Fan-out: each live shard runs candidates + exact rerank and
+        yields its scored slate — on the shard thread pool when more
+        than one live shard and ``probe_threads > 1`` (stage 1 is
+        host-bound numpy for hnsw/plaid, so shards probe concurrently).
+        Merge: slates are collected IN SHARD ORDER, concatenate along
+        the candidate axis (local ids shifted by the shard's doc_base),
+        and one shared device-side top-k picks the global winners —
+        thread scheduling can never reorder the merge, so results match
+        the sequential fan-out exactly. Probe times are per-call state:
+        concurrent batches each get their own list (the thread-safety
+        contract ``last_probe_s`` alone could not provide).
+        """
+        qs = np.asarray(qs, np.float32)
+        Nq = len(qs)
+        live = [(base, shard) for base, shard in
+                zip(self.doc_base, self.shards) if shard.n_docs > 0]
+        if len(live) > 1 and self.probe_threads > 1:
+            futs = [self._pool.submit(self._probe_shard, base, shard,
+                                      qs, q_mask, Nq)
+                    for base, shard in live]
+            slates = [f.result() for f in futs]
+        else:
+            slates = [self._probe_shard(base, shard, qs, q_mask, Nq)
+                      for base, shard in live]
+        probe_s = []
+        it = iter(slates)
+        for base, shard in zip(self.doc_base, self.shards):
+            probe_s.append(0.0 if shard.n_docs == 0 else next(it)[2])
+        if not slates:
+            return (np.full((Nq, k), -np.inf, np.float32),
+                    np.full((Nq, k), -1, np.int64), probe_s)
+        merged = (slates[0][0] if len(slates) == 1
+                  else jnp.concatenate([s[0] for s in slates], axis=1))
+        ids = (slates[0][1] if len(slates) == 1
+               else np.concatenate([s[1] for s in slates], axis=1))
+        S, I = topk_with_pads(merged, ids, k)
+        return S, I, probe_s
+
     def search_batch(self, qs: np.ndarray, k: int = 10,
                      q_mask: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k]; -inf/-1 pads).
 
-        Fan-out: each live shard runs candidates + exact rerank and
-        yields its scored slate; merge: slates concatenate along the
-        candidate axis (local ids shifted by the shard's doc_base) and
-        one shared device-side top-k picks the global winners. Device
-        work syncs ONCE, at the merge — ``last_probe_s`` records each
-        shard's host-side probe + dispatch wall time (stage 1 is
-        host-bound numpy for hnsw/plaid, so this is the shard cost that
-        matters; no per-shard device barrier is inserted).
+        See ``search_batch_with_stats`` for the fan-out/merge contract;
+        this drops the probe stats, keeping only the ``last_probe_s``
+        snapshot (one atomic assignment — safe to read, but concurrent
+        callers needing *their* timings should use the stats variant).
         """
-        qs = np.asarray(qs, np.float32)
-        Nq = len(qs)
-        slate_s: List[jnp.ndarray] = []
-        slate_i: List[np.ndarray] = []
-        self.last_probe_s = []
-        for base, shard in zip(self.doc_base, self.shards):
-            if shard.n_docs == 0:
-                self.last_probe_s.append(0.0)
-                continue
-            t0 = time.perf_counter()
-            scores, cand = shard.scored_candidates(qs, q_mask)
-            self.last_probe_s.append(time.perf_counter() - t0)
-            if cand is None:            # corpus-wide slate: ids = columns
-                gids = np.broadcast_to(
-                    base + np.arange(shard.n_docs, dtype=np.int64),
-                    (Nq, shard.n_docs))
-            else:
-                gids = np.asarray(cand, np.int64) + base
-            slate_s.append(scores)
-            slate_i.append(gids)
-        if not slate_s:
-            return (np.full((Nq, k), -np.inf, np.float32),
-                    np.full((Nq, k), -1, np.int64))
-        merged = (slate_s[0] if len(slate_s) == 1
-                  else jnp.concatenate(slate_s, axis=1))
-        ids = (slate_i[0] if len(slate_i) == 1
-               else np.concatenate(slate_i, axis=1))
-        return topk_with_pads(merged, ids, k)
+        S, I, probe_s = self.search_batch_with_stats(qs, k=k, q_mask=q_mask)
+        self.last_probe_s = probe_s
+        return S, I
 
     def search(self, q: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray]:

@@ -1,28 +1,37 @@
-"""Batched retrieval serving driver — the paper's deployment shape.
+"""Retrieval serving driver — closed-loop replay AND open-loop load.
 
+    # closed-loop (fixed microbatches, service-time percentiles):
     python -m repro.launch.serve --dataset scifact --pool-factor 2 \
         --backend plaid --queries 128 --batch-sizes 1,8,32
 
-Builds (or loads) a token-pooled index, then serves query *microbatches*
-through the staged two-stage engine: the whole microbatch is encoded and
-reranked in one traced call per stage. Each batch size gets a jit warmup
-pass first so the reported percentiles are steady-state; the driver
-reports QPS and p50/p99 per batch size plus the index footprint. On the
-production mesh the doc shards live on the ``data`` axis; here it runs
-the same code single-host.
+    # open-loop (Poisson arrivals through the ServingEngine —
+    # tail latency under offered load, dynamic batching live):
+    python -m repro.launch.serve --dataset scifact --pool-factor 2 \
+        --backend plaid --queries 256 --arrival-qps 50,200
+
+Closed-loop mode replays fixed-size microbatches through the staged
+two-stage engine and reports QPS and p50/p99 *service* time per batch
+size — exactly ``--queries`` queries are served per row (the final
+partial batch is smaller; nothing is silently wrapped and over-counted).
+
+Open-loop mode (``--arrival-qps``) is the deployment-shaped measurement:
+single queries arrive with exponential inter-arrival gaps and land on
+``launch/engine.py``'s ServingEngine, whose deadline batcher coalesces
+them into shape-bucketed microbatches. Reported p50/p99 are end-to-end
+request latency (queue wait included) — the number an SLO is written
+against — plus the batcher's flush-reason and coalescing stats.
 
 ``--index-dir`` makes the index a persistent artifact (core/persist.py):
 if the directory already holds a manifest the index is mmap-loaded from
-it — no document encoding, no index build, restart-to-serving in the
-cold-load time printed — otherwise the built index is saved there for
-the next restart. Loading dispatches on the manifest kind, so the same
-flag serves monolithic AND sharded artifacts.
+it, otherwise the built index is saved there. In open-loop mode the
+engine also WATCHES the directory: re-publishing the artifact (any
+``save`` bumps the manifest's monotonic generation) hot-swaps the new
+index in with zero dropped queries.
 
 ``--shard-max-vectors N`` builds through the STREAMING path instead
 (retrieval/indexer.py): token batches are encoded+pooled incrementally
-and flushed to capped shards, so the build's host memory is O(shard).
-Sharded serving reports the per-shard probe time alongside the usual
-percentiles.
+and flushed to capped shards; sharded serving reports per-shard probe
+times alongside the percentiles.
 """
 from __future__ import annotations
 
@@ -35,9 +44,10 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.persist import (MANIFEST_NAME, artifact_bytes,
-                                load_artifact)
+                                artifact_generation, load_artifact)
 from repro.core.sharded import ShardedIndex
 from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+from repro.launch.engine import ServingEngine, run_open_loop
 from repro.models.colbert import init_colbert
 from repro.retrieval.indexer import Indexer
 from repro.retrieval.searcher import Searcher
@@ -45,21 +55,74 @@ from repro.retrieval.searcher import Searcher
 
 def serve_microbatches(searcher: Searcher, q_tokens: np.ndarray,
                        batch_size: int, n_queries: int, k: int = 10):
-    """Serve ``n_queries`` in fixed-size microbatches; returns per-batch
-    latencies (seconds). The searcher is warmed up first so jit compile
-    time never lands in a measured batch."""
-    searcher.warmup(batch_size, k=k)
+    """Serve EXACTLY ``n_queries`` in fixed-size microbatches; returns
+    (per-batch latencies [s], per-batch served counts).
+
+    The final batch is partial when ``n_queries % batch_size != 0`` —
+    earlier versions wrapped around and silently served (and counted)
+    extra queries, inflating QPS. Both the full and the remainder batch
+    shapes are warmed first so jit compile time never lands in a
+    measured batch.
+    """
+    sizes = [batch_size] * (n_queries // batch_size)
+    if n_queries % batch_size:
+        sizes.append(n_queries % batch_size)
+    searcher.warmup(sorted(set(sizes)), k=k)
     lat = []
     served = 0
-    while served < n_queries:
-        # modular gather keeps every batch exactly batch_size queries
-        idx = (served + np.arange(batch_size)) % len(q_tokens)
+    for bs in sizes:
+        # modular gather over the query pool; exactly bs queries served
+        idx = (served + np.arange(bs)) % len(q_tokens)
         batch = q_tokens[idx]
         t = time.time()
         searcher.search(batch, k=k)
         lat.append(time.time() - t)
-        served += batch_size
-    return np.array(lat)
+        served += bs
+    assert served == n_queries, (served, n_queries)
+    return np.array(lat), np.array(sizes)
+
+
+def _print_probe(index) -> None:
+    if isinstance(index, ShardedIndex) and index.last_probe_s:
+        per = "  ".join(f"s{i}={t * 1e3:.1f}ms"
+                        for i, t in enumerate(index.last_probe_s))
+        print(f"      per-shard probe (last batch): {per}")
+
+
+def closed_loop(searcher, index, q_all, batch_sizes, n_queries, k) -> None:
+    print(f"{'batch':>5s} {'served':>7s} {'QPS':>8s} "
+          f"{'p50(ms)':>8s} {'p99(ms)':>8s}")
+    for bs in batch_sizes:
+        lat, sizes = serve_microbatches(searcher, q_all, bs, n_queries, k=k)
+        qps = sizes.sum() / lat.sum()
+        lat_ms = lat * 1e3
+        print(f"{bs:5d} {int(sizes.sum()):7d} {qps:8.1f} "
+              f"{np.percentile(lat_ms, 50):8.1f} "
+              f"{np.percentile(lat_ms, 99):8.1f}")
+        _print_probe(index)
+
+
+def open_loop(searcher, index, q_all, rates, n_queries, k,
+              max_batch, max_wait_ms, index_dir, index_generation) -> None:
+    print(f"{'offered':>8s} {'achieved':>8s} {'p50(ms)':>8s} "
+          f"{'p99(ms)':>8s} {'coalesce':>8s} {'flushes(full/ddl)':>18s} "
+          f"{'err':>4s}")
+    for i, rate in enumerate(rates):
+        engine = ServingEngine(searcher, max_batch=max_batch,
+                               max_wait_ms=max_wait_ms, k=k,
+                               index_dir=index_dir,
+                               index_generation=index_generation,
+                               warmup_on_start=(i == 0))
+        with engine:
+            row = run_open_loop(engine, q_all, rate, n_queries, k=k)
+        snap = engine.stats.snapshot()
+        fl = snap["flush_reasons"]
+        print(f"{row['arrival_qps']:8.1f} {row['achieved_qps']:8.1f} "
+              f"{row['latency_p50_ms']:8.1f} {row['latency_p99_ms']:8.1f} "
+              f"{snap['mean_batch_size']:8.1f} "
+              f"{fl['full']:8d}/{fl['deadline']:<9d} "
+              f"{row['errors']:4d}")
+        _print_probe(index)
 
 
 def main(argv=None):
@@ -72,14 +135,22 @@ def main(argv=None):
     ap.add_argument("--backend", default="plaid",
                     choices=("flat", "hnsw", "plaid"))
     ap.add_argument("--queries", type=int, default=128,
-                    help="total queries served per batch size")
+                    help="total queries served per batch size / rate")
     ap.add_argument("--batch-sizes", default="1,8,32",
-                    help="comma-separated microbatch sizes")
+                    help="comma-separated closed-loop microbatch sizes")
+    ap.add_argument("--arrival-qps", default=None,
+                    help="comma-separated offered loads; selects OPEN-LOOP "
+                         "mode (Poisson arrivals through the ServingEngine)")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="engine coalescing cap / largest shape bucket")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="engine batcher flush deadline")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--index-dir", default=None,
                     help="artifact directory: load the index from it if "
                          "a manifest exists (skip corpus encode + build), "
-                         "otherwise build and save to it")
+                         "otherwise build and save to it; in open-loop "
+                         "mode the engine watches it for hot swaps")
     ap.add_argument("--shard-max-vectors", type=int, default=0,
                     help="build via the streaming path, flushing a new "
                          "shard every N pooled vectors (0 = monolithic)")
@@ -88,6 +159,11 @@ def main(argv=None):
     if not batch_sizes or any(b <= 0 for b in batch_sizes):
         ap.error(f"--batch-sizes must be positive ints, got "
                  f"{args.batch_sizes!r}")
+    rates = ([float(r) for r in args.arrival_qps.split(",") if r]
+             if args.arrival_qps else [])
+    if args.arrival_qps and (not rates or any(r <= 0 for r in rates)):
+        ap.error(f"--arrival-qps must be positive, got "
+                 f"{args.arrival_qps!r}")
 
     cfg = get_smoke_config("colbertv2")
     params = init_colbert(jax.random.PRNGKey(0), cfg)
@@ -96,8 +172,12 @@ def main(argv=None):
 
     have_artifact = (args.index_dir is not None and os.path.isfile(
         os.path.join(args.index_dir, MANIFEST_NAME)))
+    generation = None
     if have_artifact:
         t0 = time.time()
+        # generation read BEFORE the load: a racing publish leaves the
+        # label stale-low and the engine watcher swaps once, redundantly
+        generation = artifact_generation(args.index_dir)
         index = load_artifact(args.index_dir, mmap=True)
         t_load = time.time() - t0
         kind = (f"{index.n_shards}-shard" if isinstance(index, ShardedIndex)
@@ -128,23 +208,18 @@ def main(argv=None):
               f"{stats.index_bytes / 2**20:.1f} MiB on disk, "
               f"built in {t_build:.1f}s{shard_note}"
               + (f", saved to {args.index_dir}" if args.index_dir else ""))
+        if args.index_dir:                  # our own publish just landed
+            generation = artifact_generation(args.index_dir)
 
     searcher = Searcher(params, cfg, index)
     q_all = corpus.query_token_batch(cfg.query_maxlen - 2)
-    print(f"{'batch':>5s} {'batches':>7s} {'QPS':>8s} "
-          f"{'p50(ms)':>8s} {'p99(ms)':>8s}")
-    for bs in batch_sizes:
-        lat = serve_microbatches(searcher, q_all, bs, args.queries,
-                                 k=args.k)
-        qps = bs * len(lat) / lat.sum()
-        lat_ms = lat * 1e3
-        print(f"{bs:5d} {len(lat):7d} {qps:8.1f} "
-              f"{np.percentile(lat_ms, 50):8.1f} "
-              f"{np.percentile(lat_ms, 99):8.1f}")
-        if isinstance(index, ShardedIndex) and index.last_probe_s:
-            per = "  ".join(f"s{i}={t * 1e3:.1f}ms"
-                            for i, t in enumerate(index.last_probe_s))
-            print(f"      per-shard probe (last batch): {per}")
+    if rates:
+        open_loop(searcher, index, q_all, rates, args.queries, args.k,
+                  args.max_batch, args.max_wait_ms, args.index_dir,
+                  generation)
+    else:
+        closed_loop(searcher, index, q_all, batch_sizes, args.queries,
+                    args.k)
     return 0
 
 
