@@ -1,0 +1,140 @@
+"""Public-API smoke: the whole lifecycle purely through ``repro.Retriever``.
+
+    # process 1: build + save through the facade
+    PYTHONPATH=src python benchmarks/api_smoke.py --phase build --dir api_artifacts
+    # process 2 (FRESH interpreter): reload, search, serve, verify
+    PYTHONPATH=src python benchmarks/api_smoke.py --phase serve --dir api_artifacts
+
+The ``api-surface-smoke`` CI job runs the two phases as separate steps,
+so everything the facade promises is exercised across a process
+boundary — no in-process state (module caches, object identity, jit
+caches) can paper over a broken artifact or spec round-trip:
+
+  * build phase: one tiny index per cell (monolithic plaid, sharded
+    flat, cascade) built and saved ONLY via ``repro.Retriever.build``,
+    plus the expected search results, computed through the facade.
+  * serve phase: each cell is (a) reloaded via ``repro.Retriever.load``
+    — the manifest must reconstruct an EQUAL spec — and searched, (b)
+    loaded via the direct ``Searcher.from_dir`` path, and (c) served
+    through ``retriever.serve()``'s concurrent engine; all three must
+    be BITWISE equal to the build-phase results.
+
+Exits non-zero on any mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+import repro
+from repro.core.spec import (IndexSpec, PoolingSpec, RetrieverSpec,
+                             ServeSpec, ShardSpec)
+from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
+
+CELLS = {
+    "plaid_mono": dict(backend="plaid", shard_max=0),
+    "flat_sharded": dict(backend="flat", shard_max=256),
+    "cascade": dict(backend="cascade", shard_max=0),
+}
+K = 5
+
+
+def setup():
+    cfg = repro.get_smoke_config("colbertv2")
+    params = repro.init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = DatasetSpec("api-smoke", n_docs=60, n_queries=8, n_topics=4,
+                       doc_len_mean=24, doc_len_std=4, seed=17)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    q = corpus.query_token_batch(cfg.query_maxlen - 2)
+    return cfg, params, toks, q
+
+
+def cell_spec(cfg, backend: str, shard_max: int) -> RetrieverSpec:
+    extra = (dict(coarse_factor=4, fine_factor=2, candidates=16)
+             if backend == "cascade" else {})
+    return RetrieverSpec(
+        pooling=PoolingSpec(method="ward", factor=2),
+        index=IndexSpec.from_config(cfg, backend=backend, **extra),
+        shard=ShardSpec(shard_max_vectors=shard_max))
+
+
+def phase_build(root: str) -> int:
+    cfg, params, toks, q = setup()
+    for name, cell in CELLS.items():
+        out = os.path.join(root, name)
+        spec = cell_spec(cfg, cell["backend"], cell["shard_max"])
+        r = repro.Retriever.build(params, cfg, toks, spec, out_dir=out)
+        S, I = r.search(q, k=K)
+        np.savez(os.path.join(root, f"{name}.expected.npz"),
+                 scores=np.asarray(S), ids=np.asarray(I))
+        with open(os.path.join(root, f"{name}.spec.json"), "w") as fh:
+            json.dump(spec.to_dict(), fh, indent=2)
+        print(f"built {name}: {r.stats.n_docs} docs, "
+              f"{r.stats.n_vectors_stored} vectors "
+              f"({r.stats.vector_reduction:.0%} reduction) -> {out}")
+    return 0
+
+
+def phase_serve(root: str) -> int:
+    from repro.retrieval.searcher import Searcher
+
+    cfg, params, _, q = setup()
+    failures = 0
+    for name, cell in CELLS.items():
+        out = os.path.join(root, name)
+        exp = np.load(os.path.join(root, f"{name}.expected.npz"))
+        with open(os.path.join(root, f"{name}.spec.json")) as fh:
+            built_spec = RetrieverSpec.from_dict(json.load(fh))
+
+        r = repro.Retriever.load(params, cfg, out)
+        ok_spec = (r.spec.index == built_spec.index
+                   and r.spec.pooling == built_spec.pooling
+                   and r.spec.shard == built_spec.shard)
+        S1, I1 = r.search(q, k=K)
+        ok_load = (np.array_equal(S1, exp["scores"])
+                   and np.array_equal(I1, exp["ids"]))
+
+        S2, I2 = Searcher.from_dir(params, cfg, out).search(q, k=K)
+        ok_direct = (np.array_equal(S2, exp["scores"])
+                     and np.array_equal(I2, exp["ids"]))
+
+        ok_engine = True
+        with r.serve(ServeSpec(max_batch=4, max_wait_ms=1.0, k=K)) as eng:
+            futs = [eng.submit(q[i][None]) for i in range(len(q))]
+            for i, f in enumerate(futs):
+                S, I = f.result(timeout=120)
+                ok_engine &= (np.array_equal(S[0], exp["scores"][i])
+                              and np.array_equal(I[0], exp["ids"][i]))
+
+        ok = ok_spec and ok_load and ok_direct and ok_engine
+        failures += not ok
+        print(f"{name}: spec={'ok' if ok_spec else 'MISMATCH'} "
+              f"facade={'ok' if ok_load else 'MISMATCH'} "
+              f"direct-searcher={'ok' if ok_direct else 'MISMATCH'} "
+              f"engine={'ok' if ok_engine else 'MISMATCH'}")
+    if failures:
+        print(f"FAILED: {failures} cell(s) broke fresh-process parity")
+        return 1
+    print("api-surface smoke: all cells bitwise-equal across the "
+          "process boundary")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--phase", choices=("build", "serve"), required=True)
+    ap.add_argument("--dir", default="api_artifacts")
+    args = ap.parse_args(argv)
+    os.makedirs(args.dir, exist_ok=True)
+    return (phase_build if args.phase == "build"
+            else phase_serve)(args.dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

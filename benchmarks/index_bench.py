@@ -59,9 +59,13 @@ def _measured(fn):
 def bench_cell(params, cfg, toks, method: str, factor: int, backend: str,
                cap: int, out_root: str, encode_batch: int):
     def make_indexer():
-        return Indexer(params, cfg, pool_method=method, pool_factor=factor,
-                       backend=backend, encode_batch=encode_batch,
-                       ndocs=4096)
+        from repro.core.spec import IndexSpec, PoolingSpec
+        return Indexer(
+            params, cfg, encode_batch=encode_batch,
+            index_spec=IndexSpec.from_config(cfg, backend=backend,
+                                             ndocs=4096),
+            pooling_spec=PoolingSpec(method=method,
+                                     factor=max(factor, 1)))
 
     # warm the encoder trace so jit compile lands in neither measurement
     make_indexer().encode_and_pool(toks[:encode_batch])

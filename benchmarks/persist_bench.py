@@ -44,9 +44,13 @@ def bench_cell(params, cfg, corpus, backend: str, pool_factor: int,
     toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
     art = os.path.join(out_root, f"{backend}_f{pool_factor}")
     t0 = time.time()
-    indexer = Indexer(params, cfg, pool_method="ward",
-                      pool_factor=pool_factor, backend=backend,
-                      ndocs=ndocs)
+    from repro.core.spec import IndexSpec, PoolingSpec
+    indexer = Indexer(
+        params, cfg,
+        index_spec=IndexSpec.from_config(cfg, backend=backend,
+                                         ndocs=ndocs),
+        pooling_spec=PoolingSpec(method="ward",
+                                 factor=max(pool_factor, 1)))
     index, stats = indexer.build(toks, out_dir=art)
     build_s = time.time() - t0
 
@@ -104,7 +108,7 @@ def main(argv=None):
     # queries encoded once up front: the cold-path numbers isolate the
     # index artifact, not the query encoder
     searcher = Searcher(params, cfg, index=None)
-    qs = searcher.encode(corpus.query_token_batch(cfg.query_maxlen - 2))
+    qs = searcher.encode_queries(corpus.query_token_batch(cfg.query_maxlen - 2))
 
     out_root = args.keep_dir or tempfile.mkdtemp(prefix="persist_bench_")
     try:

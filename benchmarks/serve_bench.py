@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.persist import save_index
+from repro.core.spec import (IndexSpec, PoolingSpec, ServeSpec,
+                             add_spec_args, spec_from_args)
 from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
 from repro.launch.engine import ServingEngine, run_open_loop
 from repro.launch.serve import serve_microbatches
@@ -50,9 +52,12 @@ from repro.retrieval.searcher import Searcher
 
 def bench_cell(params, cfg, corpus, backend: str, pool_factor: int,
                batch_sizes, n_queries: int, k: int, ndocs: int):
-    indexer = Indexer(params, cfg, pool_method="ward",
-                      pool_factor=pool_factor, backend=backend,
-                      ndocs=ndocs)
+    indexer = Indexer(
+        params, cfg,
+        index_spec=IndexSpec.from_config(cfg, backend=backend,
+                                         ndocs=ndocs),
+        pooling_spec=PoolingSpec(method="ward",
+                                 factor=max(pool_factor, 1)))
     index, stats = indexer.build(corpus.doc_token_batch(cfg.doc_maxlen - 2))
     searcher = Searcher(params, cfg, index)
     q_all = corpus.query_token_batch(cfg.query_maxlen - 2)
@@ -249,7 +254,6 @@ def main(argv=None):
     ap.add_argument("--batch-sizes", default="1,8,32")
     ap.add_argument("--backends", default="flat,plaid")
     ap.add_argument("--pool-factors", default="1,2")
-    ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ndocs", type=int, default=128,
                     help="PLAID stage-3 survivor budget (keep it a small "
                          "fraction of --docs so pruning engages, as at "
@@ -262,8 +266,9 @@ def main(argv=None):
     ap.add_argument("--engine-factor", type=int, default=2,
                     help="pool factor the engine cells run at (must be "
                          "in --pool-factors)")
-    ap.add_argument("--max-batch", type=int, default=32)
-    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    # engine knobs (--max-batch/--max-wait-ms/--k) derive from the
+    # typed ServeSpec (core/spec.py), same as launch/serve.py
+    add_spec_args(ap, ServeSpec, only=("max_batch", "max_wait_ms", "k"))
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--assert-parity", action="store_true",
                     help="exit non-zero on parity mismatch / failed "

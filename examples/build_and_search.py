@@ -1,59 +1,65 @@
-"""Index lifecycle example: build a pooled index, search it, then exercise
-CRUD (add new documents, delete stale ones) — the paper's §5 motivation:
-pooling makes ColBERT viable on CRUD-friendly indexes like HNSW.
+"""Index lifecycle example, through the public ``repro.Retriever``
+facade: build a pooled index, search it, persist + reload it, then
+exercise CRUD (add new documents, delete stale ones) — the paper's §5
+motivation: pooling makes ColBERT viable on CRUD-friendly indexes like
+HNSW.
 
     PYTHONPATH=src python examples/build_and_search.py --backend hnsw
 """
 import argparse
 import sys
+import tempfile
 
-import numpy as np
 import jax
 
-from repro.configs import get_smoke_config
+import repro
 from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
-from repro.models.colbert import init_colbert
-from repro.retrieval.indexer import Indexer
-from repro.retrieval.searcher import Searcher
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="hnsw",
-                    choices=("flat", "hnsw", "plaid"))
+                    choices=repro.backend_names())
     ap.add_argument("--pool-factor", type=int, default=2)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config("colbertv2")
-    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    cfg = repro.get_smoke_config("colbertv2")
+    params = repro.init_colbert(jax.random.PRNGKey(0), cfg)
     spec = DatasetSpec("crud-demo", n_docs=120, n_queries=16, n_topics=6,
                        doc_len_mean=36, doc_len_std=6, seed=11)
     corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
     toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
 
-    # 1. build with the first 100 docs
-    indexer = Indexer(params, cfg, pool_method="ward",
-                      pool_factor=args.pool_factor, backend=args.backend)
-    index, stats = indexer.build(toks[:100])
+    # 1. build with the first 100 docs — one typed spec, one call
+    r = repro.Retriever.build(params, cfg, toks[:100], repro.RetrieverSpec(
+        pooling=repro.PoolingSpec(method="ward", factor=args.pool_factor),
+        index=repro.IndexSpec.from_config(cfg, backend=args.backend)))
+    stats = r.stats
     print(f"built {args.backend} index: {stats.n_docs} docs, "
           f"{stats.n_vectors_stored} vectors "
           f"({stats.vector_reduction:.0%} reduction), "
           f"{stats.index_bytes/2**10:.0f} KiB")
 
-    searcher = Searcher(params, cfg, index)
     q = corpus.query_token_batch(cfg.query_maxlen - 2)[:4]
-    scores, ids = searcher.search(q, k=5)
+    scores, ids = r.search(q, k=5)
     print("initial top-5 ids:", ids.tolist())
 
-    # 2. CRUD add: the remaining 20 docs arrive later
-    new_vecs = indexer.encode_and_pool(toks[100:])
-    new_ids = index.add(new_vecs)
+    # 2. persist + reload: the spec rides the artifact manifest
+    with tempfile.TemporaryDirectory() as d:
+        r.save(d)
+        r2 = repro.Retriever.load(params, cfg, d)
+        assert r2.spec.index == r.spec.index
+        print(f"reloaded from {d}: spec round-tripped, "
+              f"{r2.index.n_docs} docs served from mmap")
+
+    # 3. CRUD add: the remaining 20 docs arrive later
+    new_ids = r.add(toks[100:])
     print(f"added docs {new_ids[0]}..{new_ids[-1]}")
 
-    # 3. CRUD delete: remove the current best hit of query 0, re-search
+    # 4. CRUD delete: remove the current best hit of query 0, re-search
     victim = int(ids[0][0])
-    index.delete([victim])
-    scores2, ids2 = searcher.search(q[:1], k=5)
+    r.delete([victim])
+    scores2, ids2 = r.search(q[:1], k=5)
     assert victim not in ids2[0].tolist()
     print(f"deleted doc {victim}; new top-5 for q0: {ids2[0].tolist()}")
     return 0

@@ -1,45 +1,56 @@
-"""Quickstart: token pooling end to end in ~a minute on CPU.
+"""Quickstart: token pooling end to end in ~a minute on CPU — entirely
+through the public ``repro.Retriever`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. Build a synthetic retrieval corpus.
-2. Encode documents with a small ColBERT encoder.
-3. TOKEN-POOL the vectors (the paper's technique) at factor 2.
-4. Index (PLAID 2-bit), search, and compare against the unpooled index.
+2. ``Retriever.build``: encode with a small ColBERT encoder, TOKEN-POOL
+   the vectors (the paper's technique) at factor 2, index (PLAID 2-bit).
+3. Search, and compare quality + footprint against the unpooled
+   baseline — the paper's headline tradeoff, in one typed spec knob.
 """
 import sys
 
 import jax
-import numpy as np
 
-from repro.configs import get_smoke_config
+import repro
 from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
-from repro.models.colbert import init_colbert
-from repro.retrieval.evaluate import evaluate_pooling
+from repro.retrieval.metrics import ndcg_at_k
 
 
 def main():
-    cfg = get_smoke_config("colbertv2")
-    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    cfg = repro.get_smoke_config("colbertv2")
+    params = repro.init_colbert(jax.random.PRNGKey(0), cfg)
     print(f"encoder: {cfg.trunk.n_layers}L d={cfg.trunk.d_model} "
           f"proj={cfg.proj_dim}")
 
     spec = DatasetSpec("quickstart", n_docs=150, n_queries=24, n_topics=8,
                        doc_len_mean=40, doc_len_std=8, seed=7)
     corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    q = corpus.query_token_batch(cfg.query_maxlen - 2)
     print(f"corpus: {len(corpus.docs)} docs, {len(corpus.queries)} queries")
 
-    report = evaluate_pooling(params, cfg, corpus,
-                              methods=("ward", "sequential"),
-                              factors=(2, 4), backend="plaid",
-                              metric_name="ndcg@10")
-    print()
-    print(report.table())
-    print()
-    c = report.cell("ward", 2)
-    print(f"hierarchical pooling @ factor 2: {c.vector_reduction:.0%} "
-          f"fewer vectors at {c.relative:.1f}% relative NDCG@10 "
-          f"(the paper's headline result)")
+    def build(factor):
+        # ONE typed spec drives encode -> pool -> index (-> save/serve)
+        r = repro.Retriever.build(params, cfg, toks, repro.RetrieverSpec(
+            pooling=repro.PoolingSpec(method="ward", factor=factor),
+            index=repro.IndexSpec.from_config(cfg, backend="plaid")))
+        metric = ndcg_at_k(r.rankings(q, k=10), corpus.qrels, 10)
+        return r, metric
+
+    baseline, m_base = build(1)
+    pooled, m_pool = build(2)
+
+    print(f"\n{'':12s} {'vectors':>8s} {'bytes':>9s} {'ndcg@10':>8s}")
+    for name, r, m in (("unpooled", baseline, m_base),
+                       ("ward f=2", pooled, m_pool)):
+        print(f"{name:12s} {r.stats.n_vectors_stored:8d} "
+              f"{r.stats.index_bytes:9d} {m:8.4f}")
+    rel = 100.0 * m_pool / m_base if m_base else 0.0
+    print(f"\nhierarchical pooling @ factor 2: "
+          f"{pooled.stats.vector_reduction:.0%} fewer vectors at "
+          f"{rel:.1f}% relative NDCG@10 (the paper's headline result)")
     return 0
 
 

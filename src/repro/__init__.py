@@ -1,0 +1,65 @@
+"""Token pooling for multi-vector retrieval — JAX/Pallas reproduction.
+
+Public API. The stable surface is the spec-driven facade::
+
+    import repro
+
+    spec = repro.RetrieverSpec(pooling=repro.PoolingSpec("ward", 2),
+                               index=repro.IndexSpec(backend="plaid"))
+    r = repro.Retriever.build(params, cfg, doc_tokens, spec, out_dir="idx")
+    scores, ids = r.search(query_tokens, k=10)
+    r2 = repro.Retriever.load(params, cfg, "idx")     # fresh process
+    with r2.serve() as engine:                        # concurrent runtime
+        fut = engine.submit(query_tokens[0])
+
+``__all__`` is the pinned public surface (tests/test_spec.py guards
+it); attributes resolve lazily so ``import repro`` stays cheap until a
+heavy subsystem (encoder, engine) is actually touched.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # facade + specs (the stable surface)
+    "Retriever": "repro.api",
+    "RetrieverSpec": "repro.core.spec",
+    "PoolingSpec": "repro.core.spec",
+    "IndexSpec": "repro.core.spec",
+    "ShardSpec": "repro.core.spec",
+    "ServeSpec": "repro.core.spec",
+    # registries (extension points)
+    "register_pooling_strategy": "repro.core.spec",
+    "pooling_methods": "repro.core.spec",
+    "register_backend": "repro.core.spec",
+    "backend_names": "repro.core.spec",
+    # the layers underneath (still public, reached through the facade)
+    "Indexer": "repro.retrieval.indexer",
+    "Searcher": "repro.retrieval.searcher",
+    "ServingEngine": "repro.launch.engine",
+    "MultiVectorIndex": "repro.core.index",
+    "ShardedIndex": "repro.core.sharded",
+    "CascadeIndex": "repro.retrieval.cascade",
+    # persistence + evaluation + configs
+    "load_artifact": "repro.core.persist",
+    "IndexFormatError": "repro.core.persist",
+    "evaluate_pooling": "repro.retrieval.evaluate",
+    "get_config": "repro.configs",
+    "get_smoke_config": "repro.configs",
+    "init_colbert": "repro.models.colbert",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    value = getattr(importlib.import_module(target), name)
+    globals()[name] = value          # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

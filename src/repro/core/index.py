@@ -39,14 +39,15 @@ from repro.core.maxsim import (maxsim_all_docs, maxsim_rerank_store,
 from repro.core.plaid import (PLAIDIndex, build_plaid_index,
                               plaid_candidates)
 from repro.core.quantization import train_codec
+from repro.core.spec import INDEX_PARAM_KEYS
 
 BACKENDS = ("flat", "hnsw", "plaid")
 
-# construction knobs shared by persistence (manifest params) and sharding
-# (per-shard construction) — the single source of truth for both
-PARAM_KEYS = ("doc_maxlen", "n_centroids", "quant_bits", "nprobe",
-              "t_cs", "ndocs", "hnsw_m", "hnsw_ef_construction",
-              "hnsw_candidates")
+# Construction knobs shared by persistence (manifest params) and sharding
+# (per-shard construction). The defining copy lives in core/spec.py —
+# the typed spec layer every surface (Indexer, manifests, CLI) derives
+# from; this re-export keeps the long-standing import site working.
+PARAM_KEYS = INDEX_PARAM_KEYS
 
 
 @dataclass

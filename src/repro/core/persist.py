@@ -42,7 +42,10 @@ from typing import Any, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import PARAM_KEYS as _PARAM_KEYS
+# the ONE definition of the manifest "params" key set (core/spec.py);
+# persist used to shadow its own copy of core/index.PARAM_KEYS — drift
+# between the two silently rejected valid manifests
+from repro.core.spec import INDEX_PARAM_KEYS as _PARAM_KEYS
 
 FORMAT_VERSION = 1
 MANIFEST_NAME = "manifest.json"
@@ -345,7 +348,11 @@ def serialized_nbytes(index) -> int:
     number (``IndexStats.index_bytes``), without writing anything."""
     # nbytes is stride-independent: it already equals the contiguous
     # serialized size, so no ascontiguousarray copy is needed here
-    _, payloads = index_payloads(index)
+    from repro.retrieval.cascade import CascadeIndex
+    if isinstance(index, CascadeIndex):     # two-level stores
+        _, payloads = cascade_payloads(index)
+    else:
+        _, payloads = index_payloads(index)
     return sum(int(a.nbytes) for a in payloads.values())
 
 
@@ -534,7 +541,9 @@ def load_artifact(path: str, mmap: bool = True):
 # ---------------------------------------------------------------------------
 # CascadeIndex <-> artifact
 # ---------------------------------------------------------------------------
-def save_cascade(cascade, path: str) -> Dict[str, Any]:
+def cascade_payloads(cascade) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+    """(meta, payloads) for a CascadeIndex — the exact bytes
+    ``save_cascade`` would write (also used for footprint sizing)."""
     meta = {"kind": "cascade_index",
             "dim": int(cascade.dim),
             "coarse_factor": int(cascade.coarse_factor),
@@ -543,6 +552,15 @@ def save_cascade(cascade, path: str) -> Dict[str, Any]:
             "doc_maxlen": int(cascade.doc_maxlen)}
     payloads = _docstore_payloads(cascade._coarse, "coarse_")
     payloads.update(_docstore_payloads(cascade._fine, "fine_"))
+    return meta, payloads
+
+
+def save_cascade(cascade, path: str,
+                 extra_meta: Optional[Dict[str, Any]] = None
+                 ) -> Dict[str, Any]:
+    meta, payloads = cascade_payloads(cascade)
+    if extra_meta:
+        meta.update(extra_meta)
     return write_artifact(path, meta, payloads)
 
 

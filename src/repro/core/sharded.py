@@ -53,7 +53,8 @@ from repro.core.index import BACKENDS, PARAM_KEYS, MultiVectorIndex
 from repro.core.maxsim import topk_with_pads
 
 # shard construction knobs forwarded verbatim to MultiVectorIndex — the
-# same set the persistence manifest records (single source of truth)
+# same set the persistence manifest records (one definition for all
+# three, owned by the spec layer: core/spec.py INDEX_PARAM_KEYS)
 SHARD_PARAM_KEYS = PARAM_KEYS
 
 

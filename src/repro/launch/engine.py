@@ -400,6 +400,20 @@ class ServingEngine:
         self._threads: List[threading.Thread] = []
         self._started = False
 
+    @classmethod
+    def from_spec(cls, searcher, spec=None, **kw) -> "ServingEngine":
+        """Build an engine from a typed ``ServeSpec`` (core/spec.py) —
+        the one config surface ``repro.Retriever.serve`` and the CLIs
+        share. Extra ``**kw`` (``index_dir``, ``index_generation``)
+        pass through to the constructor."""
+        from repro.core.spec import ServeSpec
+        spec = spec if spec is not None else ServeSpec()
+        return cls(searcher, max_batch=spec.max_batch,
+                   max_wait_ms=spec.max_wait_ms, k=spec.k,
+                   poll_interval_s=spec.poll_interval_s,
+                   warmup_on_start=spec.warmup_on_start,
+                   pipeline_depth=spec.pipeline_depth, **kw)
+
     # ------------------------------------------------------------ lifecycle
     @property
     def generation(self) -> int:

@@ -32,6 +32,13 @@ index in with zero dropped queries.
 (retrieval/indexer.py): token batches are encoded+pooled incrementally
 and flushed to capped shards; sharded serving reports per-shard probe
 times alongside the percentiles.
+
+The knob flags are DERIVED from the typed spec layer (core/spec.py
+``add_spec_args``): --pool-method/--pool-factor come from PoolingSpec,
+--max-batch/--max-wait-ms/--k from ServeSpec, --shard-max-vectors from
+ShardSpec, and --backend's choices from the backend registry — which is
+why ``--backend cascade`` serves the pooled-cascade through the same
+engine. Builds and loads go through ``repro.Retriever``.
 """
 from __future__ import annotations
 
@@ -42,14 +49,17 @@ import time
 import jax
 import numpy as np
 
+from repro.api import Retriever
 from repro.configs import get_smoke_config
 from repro.core.persist import (MANIFEST_NAME, artifact_bytes,
-                                artifact_generation, load_artifact)
+                                artifact_generation)
 from repro.core.sharded import ShardedIndex
+from repro.core.spec import (IndexSpec, PoolingSpec, RetrieverSpec,
+                             ServeSpec, ShardSpec, add_spec_args,
+                             backend_names, spec_from_args)
 from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
 from repro.launch.engine import ServingEngine, run_open_loop
 from repro.models.colbert import init_colbert
-from repro.retrieval.indexer import Indexer
 from repro.retrieval.searcher import Searcher
 
 
@@ -102,19 +112,18 @@ def closed_loop(searcher, index, q_all, batch_sizes, n_queries, k) -> None:
         _print_probe(index)
 
 
-def open_loop(searcher, index, q_all, rates, n_queries, k,
-              max_batch, max_wait_ms, index_dir, index_generation) -> None:
+def open_loop(searcher, index, q_all, rates, n_queries,
+              serve_spec: ServeSpec, index_dir, index_generation) -> None:
     print(f"{'offered':>8s} {'achieved':>8s} {'p50(ms)':>8s} "
           f"{'p99(ms)':>8s} {'coalesce':>8s} {'flushes(full/ddl)':>18s} "
           f"{'err':>4s}")
     for i, rate in enumerate(rates):
-        engine = ServingEngine(searcher, max_batch=max_batch,
-                               max_wait_ms=max_wait_ms, k=k,
-                               index_dir=index_dir,
-                               index_generation=index_generation,
-                               warmup_on_start=(i == 0))
+        engine = ServingEngine.from_spec(
+            searcher, serve_spec.replace(warmup_on_start=(i == 0)),
+            index_dir=index_dir, index_generation=index_generation)
         with engine:
-            row = run_open_loop(engine, q_all, rate, n_queries, k=k)
+            row = run_open_loop(engine, q_all, rate, n_queries,
+                                k=serve_spec.k)
         snap = engine.stats.snapshot()
         fl = snap["flush_reasons"]
         print(f"{row['arrival_qps']:8.1f} {row['achieved_qps']:8.1f} "
@@ -129,11 +138,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="scifact",
                     choices=sorted(DATASET_SPECS))
-    ap.add_argument("--pool-method", default="ward",
-                    choices=("ward", "kmeans", "sequential", "none"))
-    ap.add_argument("--pool-factor", type=int, default=2)
-    ap.add_argument("--backend", default="plaid",
-                    choices=("flat", "hnsw", "plaid"))
+    # typed knobs derive their flags from the spec layer (core/spec.py):
+    # --pool-method/--pool-factor (PoolingSpec), --max-batch/
+    # --max-wait-ms/--k (ServeSpec), --shard-max-vectors (ShardSpec) —
+    # no hand-maintained duplicates of the spec defaults/choices here.
+    add_spec_args(ap, PoolingSpec, prefix="pool-",
+                  defaults={"factor": 2})
+    ap.add_argument("--backend", default="plaid", choices=backend_names())
     ap.add_argument("--queries", type=int, default=128,
                     help="total queries served per batch size / rate")
     ap.add_argument("--batch-sizes", default="1,8,32",
@@ -141,19 +152,13 @@ def main(argv=None):
     ap.add_argument("--arrival-qps", default=None,
                     help="comma-separated offered loads; selects OPEN-LOOP "
                          "mode (Poisson arrivals through the ServingEngine)")
-    ap.add_argument("--max-batch", type=int, default=32,
-                    help="engine coalescing cap / largest shape bucket")
-    ap.add_argument("--max-wait-ms", type=float, default=2.0,
-                    help="engine batcher flush deadline")
-    ap.add_argument("--k", type=int, default=10)
+    add_spec_args(ap, ServeSpec, only=("max_batch", "max_wait_ms", "k"))
     ap.add_argument("--index-dir", default=None,
                     help="artifact directory: load the index from it if "
                          "a manifest exists (skip corpus encode + build), "
                          "otherwise build and save to it; in open-loop "
                          "mode the engine watches it for hot swaps")
-    ap.add_argument("--shard-max-vectors", type=int, default=0,
-                    help="build via the streaming path, flushing a new "
-                         "shard every N pooled vectors (0 = monolithic)")
+    add_spec_args(ap, ShardSpec)
     args = ap.parse_args(argv)
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b]
     if not batch_sizes or any(b <= 0 for b in batch_sizes):
@@ -166,6 +171,16 @@ def main(argv=None):
                  f"{args.arrival_qps!r}")
 
     cfg = get_smoke_config("colbertv2")
+    serve_spec = spec_from_args(ServeSpec, args,
+                                only=("max_batch", "max_wait_ms", "k"))
+    try:
+        spec = RetrieverSpec(
+            pooling=spec_from_args(PoolingSpec, args, prefix="pool_"),
+            index=IndexSpec.from_config(cfg, backend=args.backend),
+            shard=spec_from_args(ShardSpec, args),
+            serve=serve_spec)
+    except ValueError as e:             # e.g. cascade + sharded
+        ap.error(str(e))
     params = init_colbert(jax.random.PRNGKey(0), cfg)
     corpus = SyntheticRetrievalCorpus(DATASET_SPECS[args.dataset],
                                       vocab_size=cfg.trunk.vocab_size)
@@ -178,26 +193,22 @@ def main(argv=None):
         # generation read BEFORE the load: a racing publish leaves the
         # label stale-low and the engine watcher swaps once, redundantly
         generation = artifact_generation(args.index_dir)
-        index = load_artifact(args.index_dir, mmap=True)
+        retriever = Retriever.load(params, cfg, args.index_dir,
+                                   mmap=True, serve=serve_spec)
+        index = retriever.index
         t_load = time.time() - t0
         kind = (f"{index.n_shards}-shard" if isinstance(index, ShardedIndex)
-                else "monolithic")
+                else retriever.spec.index.backend)
         print(f"index: loaded {args.index_dir} ({kind}) — "
               f"{index.n_docs} docs, "
               f"{artifact_bytes(args.index_dir) / 2**20:.1f} MiB on disk, "
               f"cold load {t_load * 1e3:.0f}ms (no encoder run)")
     else:
         t0 = time.time()
-        indexer = Indexer(params, cfg, pool_method=args.pool_method,
-                          pool_factor=args.pool_factor,
-                          backend=args.backend)
         toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
-        if args.shard_max_vectors > 0:
-            index, stats = indexer.build_streaming(
-                toks, shard_max_vectors=args.shard_max_vectors,
-                out_dir=args.index_dir)
-        else:
-            index, stats = indexer.build(toks, out_dir=args.index_dir)
+        retriever = Retriever.build(params, cfg, toks, spec,
+                                    out_dir=args.index_dir)
+        index, stats = retriever.index, retriever.stats
         t_build = time.time() - t0
         shard_note = (f", {stats.n_shards} shards (peak buffer "
                       f"{stats.peak_buffered_vectors} vectors)"
@@ -211,15 +222,14 @@ def main(argv=None):
         if args.index_dir:                  # our own publish just landed
             generation = artifact_generation(args.index_dir)
 
-    searcher = Searcher(params, cfg, index)
+    searcher = retriever.searcher
     q_all = corpus.query_token_batch(cfg.query_maxlen - 2)
     if rates:
-        open_loop(searcher, index, q_all, rates, args.queries, args.k,
-                  args.max_batch, args.max_wait_ms, args.index_dir,
-                  generation)
+        open_loop(searcher, index, q_all, rates, args.queries,
+                  serve_spec, args.index_dir, generation)
     else:
         closed_loop(searcher, index, q_all, batch_sizes, args.queries,
-                    args.k)
+                    serve_spec.k)
     return 0
 
 

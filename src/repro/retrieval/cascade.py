@@ -47,6 +47,10 @@ class CascadeIndex:
         self._coarse = DocStore(self.dim, self.doc_maxlen)
         self._fine = DocStore(self.dim, self.doc_maxlen)
 
+    @property
+    def n_docs(self) -> int:
+        return self._coarse.n_docs
+
     # compat views over the stores
     @property
     def coarse_docs(self) -> List[np.ndarray]:
@@ -63,10 +67,10 @@ class CascadeIndex:
         return ids
 
     # ------------------------------------------------------------ persistence
-    def save(self, path: str) -> dict:
+    def save(self, path: str, extra_meta: dict = None) -> dict:
         """Write both pool levels as one artifact dir (core/persist.py)."""
         from repro.core import persist
-        return persist.save_cascade(self, path)
+        return persist.save_cascade(self, path, extra_meta=extra_meta)
 
     @classmethod
     def from_dir(cls, path: str, mmap: bool = True) -> "CascadeIndex":
@@ -81,6 +85,21 @@ class CascadeIndex:
                 f"CascadeIndex — load it with persist.load_artifact / "
                 f"Searcher.from_dir instead")
         return obj
+
+    def warm_shapes(self, qs: np.ndarray, k: int = 10) -> None:
+        """Pre-compile every executable a serving stream at this query
+        batch shape can hit — the batched-engine conformance hook
+        (``Searcher.warmup`` / ``ServingEngine`` call it per shape
+        bucket). Unlike the staged backends, cascade shapes are
+        data-INdependent given (Nq, k): stage 1 is one all-pairs matmul
+        over the fixed coarse view and stage 2 gathers exactly
+        ``min(max(candidates, k), n_docs)`` fine slates — so one
+        organic ``search_batch`` traces everything and a mixed stream
+        afterwards re-jits nothing (compile-count probe pinned in
+        tests/test_api.py)."""
+        if self.n_docs == 0:
+            return
+        self.search_batch(np.asarray(qs, np.float32), k=k)
 
     def search_batch(self, qs: np.ndarray, k: int = 10
                      ) -> Tuple[np.ndarray, np.ndarray]:
@@ -121,13 +140,16 @@ class CascadeIndex:
 
 def build_cascade(indexer_params, cfg, doc_tokens: np.ndarray,
                   coarse_factor: int = 6, fine_factor: int = 2,
-                  candidates: int = 32) -> CascadeIndex:
-    """Encode once, pool twice (coarse + fine), build the cascade."""
+                  candidates: int = 32,
+                  pool_method: str = "ward") -> CascadeIndex:
+    """Encode once, pool twice (coarse + fine), build the cascade.
+    ``pool_method`` resolves through the spec layer's strategy registry
+    (core/spec.py), so registered policies work at both levels."""
     from repro.retrieval.indexer import Indexer
-    coarse = Indexer(indexer_params, cfg, pool_method="ward",
+    coarse = Indexer(indexer_params, cfg, pool_method=pool_method,
                      pool_factor=coarse_factor,
                      backend="flat").encode_and_pool(doc_tokens)
-    fine = Indexer(indexer_params, cfg, pool_method="ward",
+    fine = Indexer(indexer_params, cfg, pool_method=pool_method,
                    pool_factor=fine_factor,
                    backend="flat").encode_and_pool(doc_tokens)
     idx = CascadeIndex(dim=cfg.proj_dim, coarse_factor=coarse_factor,

@@ -13,6 +13,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ColbertConfig
+from repro.core.spec import IndexSpec, PoolingSpec
 from repro.data.corpus import SyntheticRetrievalCorpus
 from repro.retrieval.indexer import Indexer
 from repro.retrieval.metrics import METRICS
@@ -77,11 +78,16 @@ def evaluate_pooling(params, cfg: ColbertConfig,
     doc_tokens = corpus.doc_token_batch(cfg.doc_maxlen - 2)
     q_tokens = corpus.query_token_batch(query_maxlen
                                         or (cfg.query_maxlen - 2))
+    # loose **index_kw stays accepted here (harness convenience) but is
+    # folded into a typed IndexSpec before it reaches the Indexer
+    spec = IndexSpec.from_config(cfg, backend=backend, **index_kw)
 
     def run(method: str, factor: int):
-        idx, stats = Indexer(params, cfg, pool_method=method,
-                             pool_factor=factor, backend=backend,
-                             **index_kw).build(doc_tokens)
+        idx, stats = Indexer(
+            params, cfg, index_spec=spec,
+            pooling_spec=PoolingSpec(method=method,
+                                     factor=max(int(factor), 1)),
+        ).build(doc_tokens)
         searcher = Searcher(params, cfg, idx)
         ranked = searcher.rankings(q_tokens, k=max(k, 10))
         return metric_fn(ranked, corpus.qrels), stats

@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from dataclasses import dataclass
 from typing import Iterable, List, Optional
 
@@ -32,8 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ColbertConfig
-from repro.core.index import MultiVectorIndex
-from repro.core.pooling import compact_pooled, pool_doc_embeddings
+from repro.core.index import BACKENDS, MultiVectorIndex
+from repro.core.pooling import compact_pooled
+from repro.core.spec import IndexSpec, PoolingSpec
 from repro.models.colbert import encode_docs
 
 
@@ -64,27 +66,55 @@ class Indexer:
                  pool_method: Optional[str] = None,
                  pool_factor: Optional[int] = None,
                  backend: Optional[str] = None,
-                 encode_batch: int = 64, **index_kw):
+                 encode_batch: int = 64,
+                 index_spec: Optional[IndexSpec] = None,
+                 pooling_spec: Optional[PoolingSpec] = None,
+                 **index_kw):
+        """The typed surface is ``index_spec``/``pooling_spec``
+        (core/spec.py) — what ``repro.Retriever`` passes. The loose
+        ``pool_method``/``pool_factor``/``backend`` names remain as
+        equivalent shorthand; raw ``**index_kw`` construction knobs are
+        DEPRECATED in favour of ``index_spec=IndexSpec(...)``.
+        """
         self.params = params
         self.cfg = cfg
-        self.pool_method = pool_method or cfg.pool_method
-        self.pool_factor = (pool_factor if pool_factor is not None
-                            else cfg.pool_factor)
-        self.backend = backend or cfg.index_backend
+        if index_spec is not None and (backend is not None or index_kw):
+            raise TypeError("pass either index_spec or loose "
+                            "backend/**index_kw knobs, not both")
+        if pooling_spec is not None and (pool_method is not None
+                                         or pool_factor is not None):
+            raise TypeError("pass either pooling_spec or loose "
+                            "pool_method/pool_factor knobs, not both")
+        if index_kw:
+            warnings.warn(
+                "Indexer(**index_kw) is deprecated; pass "
+                "index_spec=repro.IndexSpec(...) (see repro.core.spec)",
+                DeprecationWarning, stacklevel=2)
+        if index_spec is None:
+            index_spec = IndexSpec.from_config(
+                cfg, backend=backend or cfg.index_backend, **index_kw)
+        if index_spec.backend not in BACKENDS:
+            raise ValueError(
+                f"Indexer builds {BACKENDS} indexes; backend "
+                f"{index_spec.backend!r} builds through repro.Retriever")
+        if pooling_spec is None:
+            pooling_spec = PoolingSpec(
+                method=pool_method or cfg.pool_method,
+                factor=max(int(pool_factor if pool_factor is not None
+                               else cfg.pool_factor), 1))
+        self.index_spec = index_spec
+        self.pooling = pooling_spec
+        # legacy attribute surface (serve/bench reporting reads these)
+        self.pool_method = pooling_spec.method
+        self.pool_factor = pooling_spec.factor
+        self.backend = index_spec.backend
         self.encode_batch = encode_batch
-        self.index_kw = index_kw
 
     def _index_kw(self) -> dict:
-        """Index construction knobs: config defaults, overridden by the
-        explicit ``**index_kw`` — ONE definition for both build paths
-        (monolithic and streaming must construct identical indexes)."""
-        kw = dict(doc_maxlen=self.cfg.doc_maxlen,
-                  n_centroids=self.cfg.n_centroids,
-                  quant_bits=self.cfg.quant_bits,
-                  nprobe=self.cfg.nprobe, t_cs=self.cfg.t_cs,
-                  ndocs=self.cfg.ndocs)
-        kw.update(self.index_kw)        # explicit kwargs override config
-        return kw
+        """Index construction knobs — ``IndexSpec.params()``, ONE
+        definition for both build paths (monolithic and streaming must
+        construct identical indexes)."""
+        return self.index_spec.params()
 
     def encode_and_pool(self, doc_tokens: np.ndarray) -> List[np.ndarray]:
         """doc_tokens [N, L] -> list of per-doc pooled vector arrays."""
@@ -99,9 +129,7 @@ class Indexer:
             if pad:
                 chunk = np.pad(chunk, ((0, pad), (0, 0)))
             v, emit = encode_docs(self.params, jnp.asarray(chunk), self.cfg)
-            method = ("none" if self.pool_factor <= 1 else self.pool_method)
-            pooled, pmask = pool_doc_embeddings(
-                v, emit, max(self.pool_factor, 1), method)
+            pooled, pmask = self.pooling.apply(v, emit)
             docs = compact_pooled(pooled, pmask)
             out.extend(docs[:B - pad] if pad else docs)
         return out
@@ -125,8 +153,7 @@ class Indexer:
         index.add(doc_vecs)
         if out_dir is not None:
             manifest = index.save(out_dir, extra_meta={
-                "pool": {"method": self.pool_method,
-                         "factor": self.pool_factor}})
+                "pool": self.pooling.manifest_meta()})
             index_bytes = artifact_bytes(manifest)
         else:
             index_bytes = serialized_nbytes(index)
@@ -222,8 +249,7 @@ class Indexer:
 
         if out_dir is not None:
             manifest = finalize_sharded(sharded, out_dir, extra_meta={
-                "pool": {"method": self.pool_method,
-                         "factor": self.pool_factor}})
+                "pool": self.pooling.manifest_meta()})
             index_bytes = artifact_bytes(manifest)
         else:
             from repro.core.persist import serialized_nbytes

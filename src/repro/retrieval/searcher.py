@@ -88,8 +88,15 @@ class Searcher:
             out.append(v[:n] if pad else v)
         return np.concatenate(out)
 
-    # legacy name, kept for callers predating the stage split
-    encode = encode_queries
+    def encode(self, query_tokens: np.ndarray) -> np.ndarray:
+        """DEPRECATED alias predating the stage split — use
+        :meth:`encode_queries` (the name the spec-era public API,
+        ``repro.Retriever``, and the serving engine pipeline use)."""
+        import warnings
+        warnings.warn("Searcher.encode is deprecated; use "
+                      "Searcher.encode_queries", DeprecationWarning,
+                      stacklevel=2)
+        return self.encode_queries(query_tokens)
 
     def search(self, query_tokens: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,279 @@
+"""The ``repro.Retriever`` facade: bitwise parity with the pre-redesign
+``Indexer``/``Searcher``/``ServingEngine`` call paths (all backends,
+monolithic + sharded + cascade), real-artifact spec round-trips, the
+cascade's batched-engine conformance (no-retrace probe), and the
+deprecation shims naming their spec replacements."""
+import json
+
+import numpy as np
+import jax
+import pytest
+
+import repro
+from repro.configs import get_smoke_config
+from repro.core.persist import read_manifest
+from repro.core.spec import (IndexSpec, PoolingSpec, RetrieverSpec,
+                             ServeSpec, ShardSpec, manifest_meta_for,
+                             retriever_spec_from_manifest)
+from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
+from repro.launch.engine import CompileCounter, ServingEngine
+from repro.models.colbert import init_colbert
+from repro.retrieval.cascade import build_cascade
+from repro.retrieval.indexer import Indexer
+from repro.retrieval.searcher import Searcher
+
+BACKENDS = ("flat", "hnsw", "plaid")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    spec = DatasetSpec("api", n_docs=36, n_queries=8, n_topics=4,
+                       doc_len_mean=22, doc_len_std=4, seed=5)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
+    q = corpus.query_token_batch(cfg.query_maxlen - 2)[:4]
+    return cfg, params, toks, q
+
+
+def _spec(cfg, backend, factor=2, shard_max=0, **over):
+    return RetrieverSpec(
+        pooling=PoolingSpec(method="ward", factor=factor),
+        index=IndexSpec.from_config(cfg, backend=backend, **over),
+        shard=ShardSpec(shard_max_vectors=shard_max))
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity with the pre-redesign call paths
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_facade_parity_monolithic(setup, backend):
+    cfg, params, toks, q = setup
+    r = repro.Retriever.build(params, cfg, toks, _spec(cfg, backend))
+    S1, I1 = r.search(q, k=5)
+    idx, stats = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                         backend=backend).build(toks)
+    S2, I2 = Searcher(params, cfg, idx).search(q, k=5)
+    assert np.array_equal(S1, S2) and np.array_equal(I1, I2)
+    assert r.stats.n_vectors_stored == stats.n_vectors_stored
+    assert r.stats.index_bytes == stats.index_bytes
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_facade_parity_sharded(setup, backend):
+    cfg, params, toks, q = setup
+    cap = 160
+    r = repro.Retriever.build(params, cfg, toks,
+                              _spec(cfg, backend, shard_max=cap))
+    assert r.index.n_shards > 1
+    S1, I1 = r.search(q, k=5)
+    idx, _ = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                     backend=backend).build_streaming(
+        toks, shard_max_vectors=cap)
+    S2, I2 = Searcher(params, cfg, idx).search(q, k=5)
+    assert np.array_equal(S1, S2) and np.array_equal(I1, I2)
+
+
+def test_facade_parity_cascade(setup):
+    cfg, params, toks, q = setup
+    r = repro.Retriever.build(
+        params, cfg, toks,
+        _spec(cfg, "cascade", coarse_factor=4, fine_factor=2,
+              candidates=16))
+    S1, I1 = r.search(q, k=5)
+    cascade = build_cascade(params, cfg, toks, coarse_factor=4,
+                            fine_factor=2, candidates=16)
+    qv = Searcher(params, cfg, None).encode_queries(q)
+    S2, I2 = cascade.search_batch(qv, k=5)
+    assert np.array_equal(S1, np.asarray(S2))
+    assert np.array_equal(I1, np.asarray(I2))
+
+
+@pytest.mark.parametrize("backend", ["flat", "cascade"])
+def test_facade_engine_parity(setup, backend):
+    """`.serve()` results == direct facade search, bitwise — cascade
+    rides the same runtime as the staged backends."""
+    cfg, params, toks, q = setup
+    kw = (dict(coarse_factor=4, fine_factor=2, candidates=16)
+          if backend == "cascade" else {})
+    r = repro.Retriever.build(params, cfg, toks, _spec(cfg, backend, **kw))
+    S_ref, I_ref = r.search(q, k=5)
+    with r.serve(ServeSpec(max_batch=4, max_wait_ms=1.0, k=5)) as eng:
+        futs = [eng.submit(q[i][None]) for i in range(len(q))]
+        for i, f in enumerate(futs):
+            S, I = f.result(timeout=60)
+            assert np.array_equal(S[0], S_ref[i])
+            assert np.array_equal(I[0], I_ref[i])
+
+
+# ---------------------------------------------------------------------------
+# Real artifacts: spec round-trip + load parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,shard_max", [
+    ("plaid", 0), ("flat", 160), ("cascade", 0)])
+def test_real_artifact_spec_roundtrip(setup, tmp_path, backend, shard_max):
+    """The manifest a REAL build writes carries exactly the meta
+    ``manifest_meta_for`` predicts, and reloads to an equal spec plus
+    bitwise-equal results."""
+    cfg, params, toks, q = setup
+    kw = (dict(coarse_factor=4, fine_factor=2, candidates=16)
+          if backend == "cascade" else {})
+    spec = _spec(cfg, backend, shard_max=shard_max, **kw)
+    out = str(tmp_path / "idx")
+    r = repro.Retriever.build(params, cfg, toks, spec, out_dir=out)
+    manifest = read_manifest(out)
+    expect = manifest_meta_for(spec)
+    for key, val in expect.items():
+        assert json.loads(json.dumps(manifest[key])) == \
+            json.loads(json.dumps(val)), key
+    back = retriever_spec_from_manifest(manifest)
+    assert back.pooling == spec.pooling
+    assert back.index == spec.index
+    assert back.shard == spec.shard
+
+    r2 = repro.Retriever.load(params, cfg, out)
+    assert r2.spec.index == spec.index
+    assert r2.spec.pooling == spec.pooling
+    assert r2.stats.n_docs == r.stats.n_docs            # stats.json rides
+    assert r2.stats.index_bytes == r.stats.index_bytes
+    S1, I1 = r.search(q, k=5)
+    S2, I2 = r2.search(q, k=5)
+    assert np.array_equal(S1, S2) and np.array_equal(I1, I2)
+    # the artifact also serves through the pre-facade entry point
+    S3, I3 = Searcher.from_dir(params, cfg, out).search(q, k=5)
+    assert np.array_equal(S1, S3) and np.array_equal(I1, I3)
+
+
+# ---------------------------------------------------------------------------
+# Cascade engine conformance: Searcher.from_dir -> ServingEngine,
+# warmed buckets, zero re-traces mid-stream
+# ---------------------------------------------------------------------------
+def test_cascade_from_dir_engine_no_retrace(setup, tmp_path):
+    cfg, params, toks, q = setup
+    out = str(tmp_path / "casc")
+    repro.Retriever.build(
+        params, cfg, toks,
+        _spec(cfg, "cascade", coarse_factor=4, fine_factor=2,
+              candidates=16), out_dir=out)
+    searcher = Searcher.from_dir(params, cfg, out)
+    S_ref, I_ref = searcher.search(q, k=10)
+    eng = ServingEngine(searcher, max_batch=4, max_wait_ms=1.0, k=10)
+    with eng:
+        eng.search(q[:1])               # settle any first-dispatch noise
+        with CompileCounter() as c:
+            for n in (1, 3, 2, 4, 1):
+                idx = np.arange(n) % len(q)
+                S, I = eng.search(q[idx])
+                assert np.array_equal(S, S_ref[idx])
+                assert np.array_equal(I, I_ref[idx])
+        assert c.count == 0, f"{c.count} re-traces on warm buckets"
+
+
+def test_cascade_warm_shapes_via_searcher_warmup(setup):
+    cfg, params, toks, q = setup
+    r = repro.Retriever.build(
+        params, cfg, toks,
+        _spec(cfg, "cascade", coarse_factor=4, fine_factor=2,
+              candidates=16))
+    assert hasattr(r.index, "warm_shapes")
+    r.warmup([1, 2, 4], k=10)           # dispatches through warm_shapes
+    with CompileCounter() as c:
+        r.search(q[:2], k=10)
+        r.search(q[:4], k=10)
+    assert c.count == 0
+
+
+# ---------------------------------------------------------------------------
+# CRUD through the facade
+# ---------------------------------------------------------------------------
+def test_facade_add_delete(setup):
+    cfg, params, toks, q = setup
+    r = repro.Retriever.build(params, cfg, toks[:30], _spec(cfg, "hnsw"))
+    assert r.stats.n_docs == 30
+    ids = r.add(toks[30:])
+    assert list(ids) == list(range(30, len(toks)))
+    assert r.stats.n_docs == len(toks)  # CRUD invalidates cached stats
+    S, I = r.search(q, k=5)
+    victim = int(I[0][0])
+    r.delete([victim])
+    _, I2 = r.search(q[:1], k=5)
+    assert victim not in I2[0].tolist()
+
+
+def test_facade_add_cascade(setup):
+    cfg, params, toks, q = setup
+    r = repro.Retriever.build(
+        params, cfg, toks[:30],
+        _spec(cfg, "cascade", coarse_factor=4, fine_factor=2,
+              candidates=16))
+    ids = r.add(toks[30:])
+    assert list(ids) == list(range(30, len(toks)))
+    assert r.index.n_docs == len(toks)
+    with pytest.raises(NotImplementedError):
+        r.delete([0])
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims name the spec replacement
+# ---------------------------------------------------------------------------
+def test_indexer_kwargs_deprecated(setup):
+    cfg, params, toks, _ = setup
+    with pytest.warns(DeprecationWarning, match="IndexSpec"):
+        ix = Indexer(params, cfg, backend="flat", ndocs=64)
+    assert ix.index_spec.ndocs == 64    # shim still honors the knob
+    with pytest.raises(TypeError):      # but not both surfaces at once
+        Indexer(params, cfg, index_spec=IndexSpec(backend="flat"),
+                ndocs=64)
+    with pytest.raises(TypeError):
+        Indexer(params, cfg, pool_method="kmeans",
+                pooling_spec=PoolingSpec("ward", 2))
+    with pytest.raises(ValueError, match="Retriever"):
+        Indexer(params, cfg, index_spec=IndexSpec(backend="cascade"))
+
+
+def test_coerce_dict_defaults_from_config(setup):
+    """A dict spec's omitted sections default from cfg, same as the
+    bare-spec forms — not from the class defaults."""
+    import dataclasses
+    cfg, params, toks, q = setup
+    cfg2 = dataclasses.replace(cfg, pool_factor=2)
+    got = RetrieverSpec.coerce({"index": {"backend": "flat"}}, cfg2)
+    assert got.pooling == PoolingSpec(method=cfg2.pool_method, factor=2)
+    assert got.index.backend == "flat"
+    with pytest.raises(ValueError, match="bogus"):
+        RetrieverSpec.coerce({"bogus": {}}, cfg2)
+
+
+def test_searcher_encode_deprecated(setup):
+    cfg, params, toks, q = setup
+    s = Searcher(params, cfg, None)
+    ref = s.encode_queries(q[:1])
+    with pytest.warns(DeprecationWarning, match="encode_queries"):
+        legacy = s.encode(q[:1])
+    assert np.array_equal(ref, legacy)
+
+
+# ---------------------------------------------------------------------------
+# Custom pooling strategy rides the whole facade
+# ---------------------------------------------------------------------------
+def test_custom_pooling_strategy_through_facade(setup):
+    cfg, params, toks, q = setup
+    name = "api-first-half"
+
+    def first_half(x, mask, factor):
+        m = np.asarray(mask, bool)
+        rank = np.cumsum(m, axis=-1) - 1
+        budget = np.ceil(m.sum(-1, keepdims=True) / factor)
+        return np.asarray(x), m & (rank < budget)
+
+    repro.register_pooling_strategy(name, first_half, overwrite=True)
+    r = repro.Retriever.build(
+        params, cfg, toks,
+        RetrieverSpec(pooling=PoolingSpec(method=name, factor=2),
+                      index=IndexSpec.from_config(cfg, backend="flat")))
+    baseline = repro.Retriever.build(params, cfg, toks,
+                                     _spec(cfg, "flat", factor=1))
+    assert 0 < r.stats.n_vectors_stored < baseline.stats.n_vectors_stored
+    S, I = r.search(q, k=5)
+    assert I.shape == (len(q), 5) and np.all(I >= 0)

@@ -32,7 +32,7 @@ def test_cascade_quality_vs_flat(setup):
                           backend="flat").build(toks)
     searcher = Searcher(params, cfg, fine_idx)
     q_tokens = corpus.query_token_batch(cfg.query_maxlen - 2)
-    qv = searcher.encode(q_tokens)
+    qv = searcher.encode_queries(q_tokens)
 
     _, ids_fine = fine_idx.search_batch(qv, k=10)
     _, ids_casc = cascade.search_batch(qv, k=10)
@@ -57,6 +57,6 @@ def test_cascade_crud_add(setup):
     ids = cascade.add(coarse, fine)
     assert list(ids) == list(range(80, 100))
     searcher = Searcher(params, cfg, None)
-    qv = searcher.encode(corpus.query_token_batch(cfg.query_maxlen - 2)[:2])
+    qv = searcher.encode_queries(corpus.query_token_batch(cfg.query_maxlen - 2)[:2])
     s, i = cascade.search(np.asarray(qv)[0], k=5)
     assert len(i) == 5

@@ -263,9 +263,13 @@ def test_plaid_on_disk_smaller_than_flat():
     corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
     toks = corpus.doc_token_batch(cfg.doc_maxlen - 2)
     sizes = {}
+    from repro.core.spec import IndexSpec, PoolingSpec
     for backend in ("plaid", "flat"):
-        _, stats = Indexer(params, cfg, pool_method="ward", pool_factor=2,
-                           backend=backend, ndocs=64).build(toks)
+        _, stats = Indexer(
+            params, cfg,
+            index_spec=IndexSpec.from_config(cfg, backend=backend,
+                                             ndocs=64),
+            pooling_spec=PoolingSpec(method="ward", factor=2)).build(toks)
         assert stats.index_bytes > 0
         sizes[backend] = stats.index_bytes
     assert sizes["plaid"] < sizes["flat"], sizes

@@ -1,0 +1,250 @@
+"""The typed spec layer (core/spec.py): manifest round-trips, strict
+unknown-key rejection, the pooling/backend registries, argparse
+derivation, and the pinned public API surface of ``import repro``."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import spec as S
+from repro.core.spec import (BUILTIN_POOL_METHODS, CASCADE_PARAM_KEYS,
+                             INDEX_PARAM_KEYS, IndexSpec, PoolingSpec,
+                             RetrieverSpec, ServeSpec, ShardSpec,
+                             add_spec_args, backend_names,
+                             manifest_meta_for, pooling_methods,
+                             pooling_strategy, register_pooling_strategy,
+                             retriever_spec_from_manifest, spec_from_args)
+
+
+# ---------------------------------------------------------------------------
+# Single source of truth: spec defaults == index dataclass defaults
+# ---------------------------------------------------------------------------
+def test_index_spec_defaults_match_index_dataclasses():
+    """A default IndexSpec must build the default index — the spec is
+    the single source of truth, so drift here is a silent config fork."""
+    from repro.core.index import PARAM_KEYS, MultiVectorIndex
+    from repro.retrieval.cascade import CascadeIndex
+
+    assert PARAM_KEYS == INDEX_PARAM_KEYS       # re-export, same object
+    mv_defaults = {f.name: f.default
+                   for f in dataclasses.fields(MultiVectorIndex)}
+    spec = IndexSpec()
+    for key in INDEX_PARAM_KEYS:
+        assert getattr(spec, key) == mv_defaults[key], key
+    cc_defaults = {f.name: f.default
+                   for f in dataclasses.fields(CascadeIndex)}
+    for key in CASCADE_PARAM_KEYS:
+        assert getattr(spec, key) == cc_defaults[key], key
+
+
+def test_persist_imports_spec_keys():
+    """core/persist.py must consume the SAME key set object (it used to
+    shadow its own copy; drift silently rejected valid manifests)."""
+    from repro.core import persist
+    from repro.core import sharded
+    assert persist._PARAM_KEYS is INDEX_PARAM_KEYS
+    assert sharded.SHARD_PARAM_KEYS is INDEX_PARAM_KEYS
+
+
+# ---------------------------------------------------------------------------
+# Manifest round-trip (fixed grid; the hypothesis sweep over arbitrary
+# knob values lives in tests/test_spec_properties.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", backend_names())
+@pytest.mark.parametrize("method", BUILTIN_POOL_METHODS)
+@pytest.mark.parametrize("shard_max", [0, 64])
+def test_spec_to_manifest_to_spec_identity(backend, method, shard_max):
+    """spec -> manifest meta -> json -> spec is the identity for every
+    persisted field (serve knobs are runtime-only by design)."""
+    if backend == "cascade":
+        if shard_max:                       # cascade has no sharded layout
+            pytest.skip("cascade is monolithic-only")
+        index = IndexSpec(backend="cascade", coarse_factor=5,
+                          fine_factor=3, candidates=48, doc_maxlen=96)
+    else:
+        index = IndexSpec(backend=backend, doc_maxlen=40, n_centroids=17,
+                          quant_bits=4, nprobe=3, t_cs=0.125, ndocs=999,
+                          hnsw_m=7, hnsw_ef_construction=33,
+                          hnsw_candidates=555)
+    spec = RetrieverSpec(pooling=PoolingSpec(method=method, factor=3),
+                         index=index,
+                         shard=ShardSpec(shard_max_vectors=shard_max))
+    meta = manifest_meta_for(spec)
+    back = retriever_spec_from_manifest(json.loads(json.dumps(meta)))
+    assert back.pooling == spec.pooling
+    assert back.index == spec.index
+    assert back.shard == spec.shard
+    assert RetrieverSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict()))) == spec
+
+
+# ---------------------------------------------------------------------------
+# Strict validation
+# ---------------------------------------------------------------------------
+def test_unknown_keys_rejected():
+    with pytest.raises(ValueError, match="bogus"):
+        IndexSpec.from_dict({"bogus": 1})
+    with pytest.raises(ValueError, match="bogus"):
+        PoolingSpec.from_dict({"method": "ward", "bogus": 2})
+    with pytest.raises(ValueError, match="bogus"):
+        RetrieverSpec.from_dict({"bogus": {}})
+    with pytest.raises(ValueError, match="bogus"):
+        RetrieverSpec.from_dict({"index": {"bogus": 1}})
+    with pytest.raises(ValueError, match="unknown index params"):
+        IndexSpec.from_manifest_params("plaid", {"bogus": 3})
+    with pytest.raises(TypeError):
+        IndexSpec().replace(bogus=1)
+
+
+def test_value_validation():
+    with pytest.raises(ValueError):
+        PoolingSpec(factor=0)
+    with pytest.raises(ValueError):
+        PoolingSpec(method="")
+    with pytest.raises(ValueError, match="unknown backend"):
+        IndexSpec(backend="faiss")
+    with pytest.raises(ValueError):
+        ShardSpec(shard_max_vectors=-1)
+    with pytest.raises(ValueError):
+        ServeSpec(max_batch=0)
+    with pytest.raises(ValueError, match="sharded"):
+        RetrieverSpec(index=IndexSpec(backend="cascade"),
+                      shard=ShardSpec(shard_max_vectors=10))
+    with pytest.raises(ValueError, match="no retriever spec"):
+        retriever_spec_from_manifest({"kind": "residual_codec"})
+
+
+def test_coerce_accepts_parts():
+    ix = IndexSpec(backend="flat")
+    assert RetrieverSpec.coerce(ix).index == ix
+    pl = PoolingSpec("kmeans", 3)
+    assert RetrieverSpec.coerce(pl).pooling == pl
+    sh = ShardSpec(shard_max_vectors=7)
+    assert RetrieverSpec.coerce(sh).shard == sh
+    full = RetrieverSpec(pooling=pl)
+    assert RetrieverSpec.coerce(full) is full
+    with pytest.raises(TypeError):
+        RetrieverSpec.coerce(42)
+
+
+# ---------------------------------------------------------------------------
+# Pooling strategy registry
+# ---------------------------------------------------------------------------
+def test_builtin_pooling_matches_pool_doc_embeddings(rng):
+    """The registry's builtin strategies are the paper's pooling — the
+    spec path must be bitwise identical to calling it directly."""
+    from repro.core.pooling import pool_doc_embeddings
+    x = rng.normal(size=(2, 12, 8)).astype(np.float32)
+    mask = np.ones((2, 12), bool)
+    mask[1, 9:] = False
+    for method in ("sequential", "ward"):
+        got_p, got_m = PoolingSpec(method=method, factor=2).apply(x, mask)
+        exp_p, exp_m = pool_doc_embeddings(x, mask, 2, method)
+        assert np.array_equal(np.asarray(got_p), np.asarray(exp_p))
+        assert np.array_equal(np.asarray(got_m), np.asarray(exp_m))
+    # factor 1 short-circuits to the identity strategy, any method name
+    got_p, got_m = PoolingSpec(method="ward", factor=1).apply(x, mask)
+    exp_p, exp_m = pool_doc_embeddings(x, mask, 1, "none")
+    assert np.array_equal(np.asarray(got_p), np.asarray(exp_p))
+    assert np.array_equal(np.asarray(got_m), np.asarray(exp_m))
+
+
+def test_pooling_registry_plugs_in_custom_strategy(rng):
+    """A new policy (e.g. per-doc adaptive budgets) is one registration,
+    not an indexer fork."""
+    name = "test-first-half"
+
+    def first_half(x, mask, factor):
+        m = np.asarray(mask, bool)
+        rank = np.cumsum(m, axis=-1) - 1
+        budget = np.ceil(m.sum(-1, keepdims=True) / factor)
+        return np.asarray(x), m & (rank < budget)
+
+    register_pooling_strategy(name, first_half)
+    assert name in pooling_methods()
+    assert pooling_strategy(name) is first_half
+    x = rng.normal(size=(1, 10, 4)).astype(np.float32)
+    mask = np.ones((1, 10), bool)
+    _, pm = PoolingSpec(method=name, factor=2).apply(x, mask)
+    assert pm.sum() == 5
+    with pytest.raises(ValueError, match="already registered"):
+        register_pooling_strategy(name, first_half)
+    register_pooling_strategy(name, first_half, overwrite=True)
+    with pytest.raises(KeyError):
+        pooling_strategy("no-such-method")
+
+
+# ---------------------------------------------------------------------------
+# Argparse derivation
+# ---------------------------------------------------------------------------
+def test_add_spec_args_roundtrip():
+    import argparse
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap, ServeSpec, only=("max_batch", "max_wait_ms", "k"))
+    add_spec_args(ap, PoolingSpec, prefix="pool-", defaults={"factor": 2})
+    add_spec_args(ap, ShardSpec)
+    args = ap.parse_args(["--max-batch", "8", "--max-wait-ms", "1.5",
+                          "--pool-method", "kmeans",
+                          "--shard-max-vectors", "256"])
+    serve = spec_from_args(ServeSpec, args,
+                           only=("max_batch", "max_wait_ms", "k"))
+    assert serve == ServeSpec(max_batch=8, max_wait_ms=1.5, k=10)
+    pool = spec_from_args(PoolingSpec, args, prefix="pool_")
+    assert pool == PoolingSpec(method="kmeans", factor=2)
+    assert spec_from_args(ShardSpec, args) == ShardSpec(
+        shard_max_vectors=256)
+    # defaults flow from the dataclass when the flag is omitted
+    args2 = ap.parse_args([])
+    assert spec_from_args(ServeSpec, args2,
+                          only=("max_batch", "max_wait_ms", "k")
+                          ) == ServeSpec()
+    # cli=False fields never become flags
+    flags = {a.dest for a in ap._actions}
+    assert "poll_interval_s" not in flags
+    assert "pipeline_depth" not in flags
+
+
+def test_spec_from_args_overrides_win():
+    import argparse
+    ap = add_spec_args(argparse.ArgumentParser(), ShardSpec)
+    args = ap.parse_args(["--shard-max-vectors", "32"])
+    assert spec_from_args(ShardSpec, args,
+                          shard_max_vectors=0) == ShardSpec()
+
+
+# ---------------------------------------------------------------------------
+# Public API surface
+# ---------------------------------------------------------------------------
+def test_public_api_surface_pinned():
+    """``import repro`` exports exactly this surface; every name must
+    resolve. Growing it is fine — update the pin deliberately."""
+    import repro
+    assert repro.__all__ == sorted([
+        "Retriever", "RetrieverSpec", "PoolingSpec", "IndexSpec",
+        "ShardSpec", "ServeSpec",
+        "register_pooling_strategy", "pooling_methods",
+        "register_backend", "backend_names",
+        "Indexer", "Searcher", "ServingEngine",
+        "MultiVectorIndex", "ShardedIndex", "CascadeIndex",
+        "load_artifact", "IndexFormatError",
+        "evaluate_pooling", "get_config", "get_smoke_config",
+        "init_colbert",
+    ])
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+    with pytest.raises(AttributeError):
+        repro.not_an_export
+    assert set(repro.__all__) <= set(dir(repro))
+
+
+def test_backend_registry_names():
+    assert set(backend_names()) >= {"flat", "hnsw", "plaid", "cascade"}
+    for b in ("flat", "hnsw", "plaid"):
+        assert S.backend_info(b).artifact_kind == "multi_vector_index"
+    assert S.backend_info("cascade").artifact_kind == "cascade_index"
+    import repro.api  # noqa: F401 — registers the facade builders
+    for b in ("flat", "hnsw", "plaid", "cascade"):
+        assert S.backend_info(b).builder is not None
+    with pytest.raises(KeyError):
+        S.backend_info("nope")

@@ -1,0 +1,63 @@
+"""Hypothesis sweep of the spec layer's lossless-manifest contract:
+for ANY spec across backend x pool method x sharded/monolithic and
+arbitrary knob values, spec -> manifest meta -> json -> spec is the
+identity (the fixed-grid version lives in tests/test_spec.py)."""
+import json
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.spec import (BUILTIN_POOL_METHODS, IndexSpec,  # noqa: E402
+                             PoolingSpec, RetrieverSpec, ShardSpec,
+                             backend_names, manifest_meta_for,
+                             retriever_spec_from_manifest)
+
+
+@st.composite
+def retriever_specs(draw):
+    """Specs varying every knob the backend's manifest persists."""
+    backend = draw(st.sampled_from(backend_names()))
+    pooling = PoolingSpec(
+        method=draw(st.sampled_from(BUILTIN_POOL_METHODS)),
+        factor=draw(st.integers(1, 8)))
+    if backend == "cascade":
+        index = IndexSpec(backend="cascade",
+                          coarse_factor=draw(st.integers(1, 12)),
+                          fine_factor=draw(st.integers(1, 6)),
+                          candidates=draw(st.integers(1, 256)),
+                          doc_maxlen=draw(st.integers(8, 512)))
+        shard = ShardSpec()                 # cascade has no sharded layout
+    else:
+        index = IndexSpec(
+            backend=backend,
+            doc_maxlen=draw(st.integers(8, 512)),
+            n_centroids=draw(st.integers(1, 1024)),
+            quant_bits=draw(st.sampled_from((1, 2, 4))),
+            nprobe=draw(st.integers(1, 64)),
+            t_cs=draw(st.floats(0.0, 1.0, allow_nan=False)),
+            ndocs=draw(st.integers(1, 1 << 20)),
+            hnsw_m=draw(st.integers(2, 64)),
+            hnsw_ef_construction=draw(st.integers(8, 512)),
+            hnsw_candidates=draw(st.integers(8, 1 << 16)))
+        shard = ShardSpec(shard_max_vectors=draw(
+            st.sampled_from((0, 64, 4096))))
+    return RetrieverSpec(pooling=pooling, index=index, shard=shard)
+
+
+@settings(max_examples=200, deadline=None)
+@given(retriever_specs())
+def test_spec_to_manifest_to_spec_identity(spec):
+    meta = manifest_meta_for(spec)
+    back = retriever_spec_from_manifest(json.loads(json.dumps(meta)))
+    assert back.pooling == spec.pooling
+    assert back.index == spec.index
+    assert back.shard == spec.shard
+
+
+@settings(max_examples=50, deadline=None)
+@given(retriever_specs())
+def test_spec_dict_roundtrip(spec):
+    assert RetrieverSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict()))) == spec
