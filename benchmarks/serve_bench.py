@@ -19,6 +19,13 @@ Two measurements land in ``BENCH_serve.json``:
     PARITY check of every served result against a direct
     ``search_batch``.
 
+``--compress-grid`` runs a third measurement instead: the
+(quant bits x pool factor) compressed-domain rerank grid ->
+``BENCH_compress.json``. Each cell serves the same plaid index twice —
+packed rerank, then the legacy reconstruction path with the f32 store
+forced resident — and records bitwise parity, both latencies, and the
+resident doc-representation byte ratio (gated >= 8x at bits=2).
+
 ``--assert-parity`` exits non-zero on any parity mismatch, failed
 query, or missed/non-monotonic hot swap (the ``serve-engine-smoke``
 CI job). It is a CORRECTNESS gate only — the throughput acceptance
@@ -245,6 +252,105 @@ def engine_cell(searcher, index, q_all, backend: str, pool_factor: int,
     return row
 
 
+def compress_cell(params, cfg, corpus, bits: int, pool_factor: int,
+                  batch: int, n_queries: int, k: int, ndocs: int):
+    """One (bits x pool_factor) cell of the compressed-domain grid.
+
+    Builds a plaid index at ``quant_bits=bits``, serves the packed path,
+    then flips the SAME index to the legacy reconstruction path
+    (``packed_rerank=False`` + forced ``recon_store()`` residency — the
+    pre-change world) and re-serves: bitwise parity, the resident
+    doc-representation ratio, and both paths' latency land in one row.
+    """
+    indexer = Indexer(
+        params, cfg,
+        index_spec=IndexSpec.from_config(cfg, backend="plaid",
+                                         ndocs=ndocs, quant_bits=bits),
+        pooling_spec=PoolingSpec(method="ward",
+                                 factor=max(pool_factor, 1)))
+    index, stats = indexer.build(corpus.doc_token_batch(cfg.doc_maxlen - 2))
+    searcher = Searcher(params, cfg, index)
+    q_all = corpus.query_token_batch(cfg.query_maxlen - 2)
+
+    def timed():
+        lat, sizes = serve_microbatches(searcher, q_all, batch,
+                                        n_queries, k=k)
+        lat_ms = lat * 1e3
+        return {"qps": float(sizes.sum()) / float(lat.sum()),
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99))}
+
+    # ---- packed (compressed-domain) serving ----------------------------
+    S1, I1 = searcher.search(q_all, k=k)            # warm + parity probe
+    packed = timed()
+    packed_detail = dict(index._plaid.device_bytes_detail())
+    packed_device = index.device_bytes()
+    assert packed_detail["recon"] == 0, \
+        "packed serving materialized the reconstruction store"
+
+    # ---- legacy twin: reconstruction store resident --------------------
+    index.packed_rerank = False
+    index._plaid.recon_store()
+    S0, I0 = searcher.search(q_all, k=k)            # warm legacy traces
+    legacy = timed()
+    recon_detail = dict(index._plaid.device_bytes_detail())
+
+    parity = bool(
+        np.array_equal(I0, I1)
+        and np.array_equal(np.asarray(S0, np.float32).view(np.int32),
+                           np.asarray(S1, np.float32).view(np.int32)))
+    doc_ratio = recon_detail["recon"] / max(packed_detail["packed"], 1)
+    row = {
+        "bits": bits, "pool_factor": pool_factor, "batch_size": batch,
+        "n_docs": index.n_docs, "n_vectors": stats.n_vectors_stored,
+        "index_bytes": stats.index_bytes,
+        "device_bytes_packed": packed_device,
+        "device_bytes_detail": packed_detail,
+        "device_bytes_legacy": index.device_bytes(),
+        "recon_bytes": recon_detail["recon"],
+        "doc_repr_ratio": doc_ratio,
+        "packed": packed, "legacy_recon": legacy,
+        "parity_bitwise": parity,
+    }
+    print(f"plaid  b={bits} f={pool_factor} bs={batch:3d} "
+          f"packed qps={packed['qps']:8.1f} p50={packed['p50_ms']:6.1f}ms | "
+          f"recon qps={legacy['qps']:8.1f} p50={legacy['p50_ms']:6.1f}ms | "
+          f"doc bytes {recon_detail['recon']}/{packed_detail['packed']} "
+          f"= {doc_ratio:.1f}x | parity={'ok' if parity else 'FAIL'}")
+    return row
+
+
+def run_compress_grid(args, cfg, params, corpus) -> int:
+    """``--compress-grid``: the (bits x pool_factor) footprint/latency
+    grid behind README's compressed-domain table -> BENCH_compress.json.
+
+    Hard gates (deterministic, so asserted here rather than read off the
+    artifact): bitwise parity in every cell, recon never resident on the
+    packed path, and >= 8x resident doc-representation reduction at
+    bits=2."""
+    bits_list = [int(b) for b in args.bits.split(",") if b]
+    factors = [int(f) for f in args.pool_factors.split(",") if f]
+    rows = [compress_cell(params, cfg, corpus, bits, f,
+                          args.compress_batch, args.queries, args.k,
+                          args.ndocs)
+            for bits in bits_list for f in factors]
+    out = {"dataset": args.dataset, "n_docs": args.docs,
+           "dim": cfg.proj_dim, "ndocs_budget": args.ndocs,
+           "grid": rows}
+    with open(args.compress_out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"\nwrote {args.compress_out}")
+    bad = [r for r in rows if not r["parity_bitwise"]]
+    bad += [r for r in rows
+            if r["bits"] == 2 and r["doc_repr_ratio"] < 8.0]
+    if bad:
+        print(f"COMPRESS GRID FAILED: {len(bad)} bad cells")
+        return 1
+    print("compress grid gates passed: bitwise parity everywhere, "
+          ">= 8x doc-representation reduction at bits=2")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="scifact")
@@ -270,6 +376,15 @@ def main(argv=None):
     # typed ServeSpec (core/spec.py), same as launch/serve.py
     add_spec_args(ap, ServeSpec, only=("max_batch", "max_wait_ms", "k"))
     ap.add_argument("--skip-engine", action="store_true")
+    ap.add_argument("--compress-grid", action="store_true",
+                    help="run the (quant bits x pool factor) "
+                         "compressed-domain rerank grid instead of the "
+                         "serving benchmark")
+    ap.add_argument("--bits", default="2,4",
+                    help="compress grid: quant_bits values (2 and/or 4)")
+    ap.add_argument("--compress-batch", type=int, default=8,
+                    help="compress grid: serving microbatch size")
+    ap.add_argument("--compress-out", default="BENCH_compress.json")
     ap.add_argument("--assert-parity", action="store_true",
                     help="exit non-zero on parity mismatch / failed "
                          "query / missed hot swap (CI smoke gate)")
@@ -284,6 +399,9 @@ def main(argv=None):
     spec = replace(DATASET_SPECS[args.dataset], n_docs=args.docs,
                    n_queries=max(max(batch_sizes), 64))
     corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+
+    if args.compress_grid:
+        return run_compress_grid(args, cfg, params, corpus)
 
     results = []
     engine_rows = []

@@ -137,7 +137,7 @@ class ColbertConfig:
     pool_factor: int = 1               # 1 = no pooling
     # Index backend
     index_backend: str = "plaid"       # "flat" | "hnsw" | "plaid"
-    quant_bits: int = 2                # PLAID residual bits (0 = fp16)
+    quant_bits: int = 2                # PLAID residual bits (2 or 4)
     n_centroids: int = 256             # IVF centroids
     nprobe: int = 8
     t_cs: float = 0.3                  # centroid score pruning threshold

@@ -88,6 +88,16 @@ class DocStore:
         """Footprint of the stored vectors (fp16 by default)."""
         return self.n_vectors(live_only) * self.dim * bytes_per_dim
 
+    def device_nbytes(self) -> int:
+        """Bytes of the padded device view ([n, L, dim] f32 + [n, L]
+        mask) — computed from shapes, without materializing the view."""
+        n = self.n_docs
+        if n == 0:
+            return 0
+        lens = self.doc_lengths()
+        L = int(min(self.doc_maxlen, max(lens.max(initial=0), 1)))
+        return max(n, 1) * L * (self.dim * 4 + 1)
+
     # -------------------------------------------------------------- CRUD
     def add(self, doc_vectors: Sequence[np.ndarray]) -> np.ndarray:
         """Append docs (list of [n_i, dim]); returns their ids."""

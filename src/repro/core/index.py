@@ -37,7 +37,7 @@ from repro.core.ivf import train_centroids
 from repro.core.maxsim import (maxsim_all_docs, maxsim_rerank_store,
                                topk_with_pads)
 from repro.core.plaid import (PLAIDIndex, build_plaid_index,
-                              plaid_candidates)
+                              maxsim_packed_rerank_store, plaid_candidates)
 from repro.core.quantization import train_codec
 from repro.core.spec import INDEX_PARAM_KEYS
 
@@ -66,6 +66,11 @@ class MultiVectorIndex:
     hnsw_m: int = 12
     hnsw_ef_construction: int = 200
     hnsw_candidates: int = 1024    # token hits gathered before doc rerank
+    # Serving toggle (not a construction param; never persisted): plaid
+    # rerank straight from packed codes vs. the legacy f32 reconstruction
+    # store. Both produce bitwise-identical scores — False exists for the
+    # parity tests and for debugging against the decoded view.
+    packed_rerank: bool = True
 
     # state
     deleted: set = field(default_factory=set)
@@ -83,11 +88,13 @@ class MultiVectorIndex:
     # ------------------------------------------------------------ doc store
     @property
     def store(self) -> DocStore:
-        """The DocStore the shared rerank stage scores against.
+        """The DocStore dense/corpus-wide scoring reads from.
 
         flat/hnsw: the raw stored vectors; plaid: the decoded
-        reconstructions (PLAID scores the compressed domain, so rerank
-        must see what decompression would produce).
+        reconstruction CACHE — touching this property materializes it
+        (O(corpus) decode + f32 residency), which the packed candidate
+        rerank never does. Only the dense path (cand width >= n_docs;
+        tiny corpora) and debug/compat views should land here.
         """
         if self.backend == "plaid":
             assert self._plaid is not None, "empty plaid index"
@@ -258,10 +265,18 @@ class MultiVectorIndex:
         qm = (jnp.ones(qs.shape[:2], bool) if q_mask is None
               else jnp.asarray(q_mask))
         if cand is None:
+            # corpus-wide dense scoring stays on the f32 view: at this
+            # width the decoded store is read Nq times per batch, so the
+            # one-off reconstruction cache pays for itself (tiny-corpus
+            # regime — see README "Compressed-domain rerank")
             d, dm = self.store.padded()
             scores = maxsim_all_docs(qs, qm, d, dm)        # [Nq, n_docs]
             return jnp.where(jnp.asarray(self._live())[None, :],
                              scores, -jnp.inf)
+        if (self.backend == "plaid" and self._plaid is not None
+                and self.packed_rerank):
+            return maxsim_packed_rerank_store(self._plaid, qs, qm,
+                                              cand, cand_mask)
         return maxsim_rerank_store(self.store, qs, qm, cand, cand_mask)
 
     def _rerank_dense(self, qs, cand, cand_mask, q_mask) -> jnp.ndarray:
@@ -351,10 +366,14 @@ class MultiVectorIndex:
             self._warm_plaid_prune(qs)
         if max(widths) >= self.n_docs:
             # dense corpus-wide fallback is reachable (a candidate set
-            # can grow to corpus width) — warm it too; when the budget
-            # caps far below n_docs, skip: it would materialize the
-            # whole padded corpus for an executable traffic never hits
-            scores = self.rerank(qs, None, None)
+            # can grow to corpus width) — warm the full dense-candidate
+            # path (_rerank_dense: corpus scan + membership mask), not
+            # just the bare scan; when the budget caps far below n_docs,
+            # skip: it would materialize the whole padded corpus for an
+            # executable traffic never hits
+            C = max(widths)
+            scores = self._rerank_dense(qs, np.zeros((Nq, C), np.int64),
+                                        np.ones((Nq, C), bool), None)
             topk_with_pads(scores, None, k)
 
     def _warm_plaid_prune(self, qs: np.ndarray) -> None:
@@ -426,3 +445,14 @@ class MultiVectorIndex:
             return self._plaid.nbytes()
         # flat: fp16 store, live docs only (deleted docs are reclaimable)
         return self._store.nbytes(bytes_per_dim=2, live_only=True)
+
+    def device_bytes(self) -> int:
+        """Device-resident bytes of the query-time doc representation —
+        what serving actually holds in accelerator memory, as opposed to
+        ``nbytes`` (the persisted/host index). plaid: packed views +
+        codec tables (+ recon cache only while resident); flat/hnsw: the
+        padded f32 view."""
+        if self.backend == "plaid":
+            return self._plaid.device_bytes() if self._plaid is not None \
+                else 0
+        return self._store.device_nbytes()

@@ -15,9 +15,15 @@ batched over the whole query batch:
      *centroid ids only* (no decompression), centroid scores below
      ``t_cs`` pruned to 0; a jit-compiled scan over candidate blocks.
      Top-``ndocs`` docs per query survive.
-  4. **Exact rerank** — survivors are gathered from the device-resident
-     reconstruction ``DocStore`` (decoded once at add time) and scored
-     in one fixed-shape ``maxsim_rerank`` batch.
+  4. **Exact rerank** — survivors' PACKED rows (centroid ids + residual
+     words) are gathered and scored in the compressed domain: the fused
+     Pallas kernel (kernels/maxsim_packed) unpacks, reconstructs and
+     renormalizes per VMEM tile on TPU; off-TPU the gathered rows are
+     decoded eagerly and fed to the same ``maxsim_rerank`` dispatcher,
+     bitwise-matching the old reconstruction path. The f32
+     reconstruction ``DocStore`` is now a lazy cache built only on
+     demand (corpus-wide dense scoring, debugging) — packed serving
+     never materializes it.
 
 Query hyperparameters default to the best PLAID reproduction-study settings
 the paper uses (Appendix A): nprobe=8, t_cs=0.3, ndocs=8192.
@@ -40,7 +46,7 @@ import numpy as np
 from repro.core.docstore import (DocStore, pad_candidate_sets,
                                  ragged_arange)
 from repro.core.ivf import InvertedLists, build_inverted_lists
-from repro.core.maxsim import maxsim_rerank_store, topk_with_pads
+from repro.core.maxsim import _on_tpu, maxsim_rerank, topk_with_pads
 from repro.core.quantization import ResidualCodec, decode, encode
 
 _CAND_BLOCK = 32       # candidate-axis padding granularity (jit shape reuse)
@@ -55,8 +61,8 @@ class PLAIDIndex:
     vec2doc: np.ndarray          # [n_vectors] int64 doc id
     doc_offsets: np.ndarray      # [n_docs + 1] int64 into vector arrays
     doc_maxlen: int
-    recon: Optional[DocStore] = None   # decoded vectors, device-resident
-    _codes_padded: Optional[Tuple] = field(default=None, repr=False)
+    recon: Optional[DocStore] = None   # decoded-vector cache, lazy
+    _packed_padded: Optional[Tuple] = field(default=None, repr=False)
 
     @property
     def n_docs(self) -> int:
@@ -67,15 +73,50 @@ class PLAIDIndex:
         return len(self.vec2doc)
 
     def nbytes(self) -> int:
-        """Compressed store: ids (4B) + packed codes + IVF/doc offsets.
+        """Resident bytes: ids (4B) + packed codes + IVF/doc offsets —
+        PLUS the f32 reconstruction cache whenever it is resident.
 
-        The reconstruction DocStore is a query-time cache, not part of
-        the persisted footprint (it is re-derivable from the codes).
+        The recon store is re-derivable (not persisted), but a resident
+        cache is real memory: hiding it here made the plaid footprint
+        look 8-14x smaller than it was. On the packed rerank path it is
+        simply never built, so the two numbers agree again.
         """
-        return (self.assignments.nbytes + self.codes.nbytes
-                + self.ivf.ids.nbytes + self.ivf.offsets.nbytes
-                + self.vec2doc.nbytes + self.doc_offsets.nbytes
-                + np.asarray(self.codec.centroids).nbytes)
+        total = (self.assignments.nbytes + self.codes.nbytes
+                 + self.ivf.ids.nbytes + self.ivf.offsets.nbytes
+                 + self.vec2doc.nbytes + self.doc_offsets.nbytes
+                 + np.asarray(self.codec.centroids).nbytes)
+        if self.recon is not None:
+            total += self.recon.nbytes(bytes_per_dim=4, live_only=False)
+        return total
+
+    def _padded_len(self) -> int:
+        """Tight padded width L = min(doc_maxlen, longest doc)."""
+        lens = np.diff(self.doc_offsets)
+        return int(min(self.doc_maxlen, max(lens.max(initial=0), 1)))
+
+    def device_bytes_detail(self) -> dict:
+        """Device-resident bytes of the query-time doc representation.
+
+        ``packed``: the [n, L] centroid ids (4B) + [n, L, W] residual
+        words (4B each) + [n, L] mask (1B) the compressed-domain rerank
+        streams. ``codec``: centroid/cutoff/value tables. ``recon``: the
+        decoded f32 view, counted only while resident — 0 under packed
+        serving, which never builds it.
+        """
+        n = max(self.n_docs, 1)
+        L = self._padded_len()
+        W = self.codes.shape[1]
+        return {
+            "packed": n * L * (4 + 4 * W + 1),
+            "codec": (np.asarray(self.codec.centroids).nbytes
+                      + np.asarray(self.codec.cutoffs).nbytes
+                      + np.asarray(self.codec.values).nbytes),
+            "recon": (self.recon.device_nbytes()
+                      if self.recon is not None else 0),
+        }
+
+    def device_bytes(self) -> int:
+        return sum(self.device_bytes_detail().values())
 
     # --------------------------------------------------------- cached views
     def _decode_docs(self, assignments, codes, lens):
@@ -90,18 +131,30 @@ class PLAIDIndex:
         return [rec[bounds[i]:bounds[i + 1]] for i in range(len(lens))]
 
     def recon_store(self) -> DocStore:
-        """Device-resident store of the decoded (reconstructed) vectors."""
+        """f32 reconstruction cache, built ON FIRST USE only.
+
+        The packed rerank path never calls this; it exists for the
+        corpus-wide dense scoring path (tiny corpora, where a resident
+        decoded view beats per-query decode) and for debugging.
+        """
         if self.recon is None:
             self.recon = DocStore(self.codec.dim, self.doc_maxlen)
             self.recon.add(self._decode_docs(self.assignments, self.codes,
                                              np.diff(self.doc_offsets)))
         return self.recon
 
-    def padded_codes(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Cached [n_docs, doc_maxlen] int32 centroid-id view + mask."""
-        if self._codes_padded is None:
-            n, L = self.n_docs, self.doc_maxlen
-            out = np.zeros((max(n, 1), L), np.int32)
+    def padded_packed(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Cached device view of the packed doc representation:
+        (ids [n, L] int32, words [n, L, W] uint32, mask [n, L]) with L
+        the tight width min(doc_maxlen, longest doc). This — not an f32
+        rebuild — is what stage 3 and the compressed-domain stage 4
+        gather from.
+        """
+        if self._packed_padded is None:
+            n, W = self.n_docs, self.codes.shape[1]
+            L = self._padded_len()
+            ids = np.zeros((max(n, 1), L), np.int32)
+            words = np.zeros((max(n, 1), L, W), self.codes.dtype)
             mask = np.zeros((max(n, 1), L), bool)
             if n and self.n_vectors:
                 lens = np.diff(self.doc_offsets)
@@ -109,13 +162,22 @@ class PLAIDIndex:
                 rows = np.repeat(np.arange(n), kept)
                 cols = ragged_arange(kept)
                 src = np.repeat(self.doc_offsets[:-1], kept) + cols
-                out[rows, cols] = self.assignments[src]
+                ids[rows, cols] = self.assignments[src]
+                words[rows, cols] = self.codes[src]
                 mask[rows, cols] = True
-            self._codes_padded = (jnp.asarray(out), jnp.asarray(mask))
-        return self._codes_padded
+            self._packed_padded = (jnp.asarray(ids), jnp.asarray(words),
+                                   jnp.asarray(mask))
+        return self._packed_padded
+
+    def padded_codes(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Centroid-id view + mask for stage-3 approx scoring — a slice
+        of the packed view (masked slots read id 0 and are zeroed by the
+        mask downstream)."""
+        ids, _, mask = self.padded_packed()
+        return ids, mask
 
     def _invalidate(self):
-        self._codes_padded = None
+        self._packed_padded = None
 
     # ------------------------------------------------------------------ CRUD
     def add(self, doc_vectors: list) -> np.ndarray:
@@ -134,7 +196,8 @@ class PLAIDIndex:
         else:
             a = np.zeros((0,), self.assignments.dtype)
             w = np.zeros((0, self.codes.shape[1]), self.codes.dtype)
-        self.recon_store().add(self._decode_docs(a, w, lens))
+        if self.recon is not None:      # keep the cache coherent if built
+            self.recon.add(self._decode_docs(a, w, lens))
         self.assignments = np.concatenate([self.assignments, a])
         self.codes = np.concatenate([self.codes, w])
         self.vec2doc = np.concatenate(
@@ -301,6 +364,52 @@ def plaid_candidates(index: PLAIDIndex, qs: np.ndarray,
     return cand, cmask
 
 
+def _decode_rows(codec: ResidualCodec, ids, words):
+    """Decode gathered padded rows: ids [..., Ld], words [..., Ld, W]
+    -> [..., Ld, dim] f32. Row-for-row ``quantization.decode``, so the
+    result is bitwise what the reconstruction DocStore would hold."""
+    shape = ids.shape
+    v = decode(codec, ids.reshape(-1), words.reshape(-1, words.shape[-1]))
+    return v.reshape(*shape, codec.dim)
+
+
+def maxsim_packed_rerank_store(index: PLAIDIndex, q, q_mask, cand,
+                               cand_mask, *, slab: int = 1024):
+    """Compressed-domain stage 4: gather PACKED rows for the survivors
+    and score them, never materializing an f32 reconstruction store.
+
+    Slabbed over the candidate axis like ``maxsim_rerank_store`` (same
+    slab width, same -inf/mask epilogue, so candidate padding and tie
+    order are identical). On TPU the fused kernel unpacks+reconstructs
+    in VMEM; off-TPU the gathered rows are decoded eagerly through
+    ``quantization.decode`` — op for op the recon path's decode — and
+    fed to the same ``maxsim_rerank`` dispatcher, making the scores
+    bitwise-equal to the reconstruction path.
+    cand/cand_mask: [Nq, C] host arrays -> scores [Nq, C] (-inf invalid).
+    """
+    codec = index.codec
+    ids, words, tmask = index.padded_packed()
+    q = jnp.asarray(q, jnp.float32)
+    cand = np.asarray(cand, np.int64)
+    cand_mask = np.asarray(cand_mask)
+    parts = []
+    for lo in range(0, cand.shape[1], slab):
+        c = jnp.asarray(cand[:, lo:lo + slab])
+        cm = jnp.asarray(cand_mask[:, lo:lo + slab])
+        aw = jnp.take(ids, c, axis=0)                  # [Nq, S, Ld]
+        ww = jnp.take(words, c, axis=0)                # [Nq, S, Ld, W]
+        dm = jnp.take(tmask, c, axis=0) & cm[:, :, None]
+        if _on_tpu():
+            from repro.kernels.maxsim_packed.ops import maxsim_packed_rerank
+            s = maxsim_packed_rerank(q, q_mask, ww, aw, dm,
+                                     codec.centroids, codec.values,
+                                     bits=codec.bits)
+        else:
+            s = maxsim_rerank(q, q_mask, _decode_rows(codec, aw, ww), dm)
+        parts.append(jnp.where(cm, s, -jnp.inf))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
 def plaid_search_batch(index: PLAIDIndex, qs: np.ndarray, k: int = 10,
                        nprobe: int = 8, t_cs: float = 0.3,
                        ndocs: int = 8192
@@ -315,7 +424,7 @@ def plaid_search_batch(index: PLAIDIndex, qs: np.ndarray, k: int = 10,
         return (np.full((Nq, k), -np.inf, np.float32),
                 np.full((Nq, k), -1, np.int64))
     qm = jnp.ones(qs.shape[:2], bool)
-    scores = maxsim_rerank_store(index.recon_store(), qs, qm, cand, cmask)
+    scores = maxsim_packed_rerank_store(index, qs, qm, cand, cmask)
     return topk_with_pads(scores, cand, k)
 
 

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.quant.ref import unpack_ref
+
 
 @dataclass
 class ResidualCodec:
@@ -99,12 +101,7 @@ def pack_codes(codes, bits: int):
 
 @functools.partial(jax.jit, static_argnames=("bits", "dim"))
 def unpack_codes(words, bits: int, dim: int):
-    M = words.shape[0]
-    cpw = _codes_per_word(bits)
-    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * bits)
-    mask = jnp.uint32((1 << bits) - 1)
-    c = (words[:, :, None] >> shifts[None, None, :]) & mask
-    return c.reshape(M, dim).astype(jnp.int32)
+    return unpack_ref(words, bits, dim)
 
 
 # ---------------------------------------------------------------------------

@@ -123,6 +123,11 @@ class ShardedIndex:
     def nbytes(self) -> int:
         return sum(s.nbytes() for s in self.shards)
 
+    def device_bytes(self) -> int:
+        """Device-resident bytes of the query-time doc representation,
+        summed over shards (see ``MultiVectorIndex.device_bytes``)."""
+        return sum(s.device_bytes() for s in self.shards)
+
     def shard_of(self, doc_ids: np.ndarray) -> np.ndarray:
         """Global doc ids -> owning shard index (vectorized)."""
         ids = np.asarray(doc_ids, np.int64)

@@ -266,6 +266,12 @@ class IndexSpec(_SpecBase):
         if self.backend not in _BACKEND_REGISTRY:
             raise ValueError(f"unknown backend {self.backend!r}; known: "
                              f"{backend_names()}")
+        # the packed rerank kernels unpack 32/bits codes per word in
+        # fixed-width lanes; only the codec widths they compile for are
+        # legal index configurations
+        if int(self.quant_bits) not in (2, 4):
+            raise ValueError(f"quant_bits must be 2 or 4, got "
+                             f"{self.quant_bits!r}")
 
     @property
     def artifact_kind(self) -> str:

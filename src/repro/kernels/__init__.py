@@ -5,8 +5,10 @@ Each kernel ships kernel.py (pl.pallas_call + BlockSpec tiling), ops.py
 oracle the tests sweep shapes/dtypes against).
 """
 from repro.kernels.maxsim.ops import maxsim
+from repro.kernels.maxsim_packed.ops import maxsim_packed_rerank
 from repro.kernels.kmeans_assign.ops import kmeans_assign
 from repro.kernels.quant.ops import dequant_score
 from repro.kernels.flash_attention.ops import flash_attention
 
-__all__ = ["maxsim", "kmeans_assign", "dequant_score", "flash_attention"]
+__all__ = ["maxsim", "maxsim_packed_rerank", "kmeans_assign",
+           "dequant_score", "flash_attention"]

@@ -1,0 +1,3 @@
+from repro.kernels.maxsim_packed.ops import maxsim_packed_rerank
+
+__all__ = ["maxsim_packed_rerank"]

@@ -1,0 +1,94 @@
+"""Fused compressed-domain MaxSim rerank Pallas TPU kernel.
+
+The PLAID stage-4 rerank without the f32 reconstruction store: each
+program streams one candidate slab's PACKED residual words + centroid
+ids into VMEM, reconstructs the token vectors in-register
+(``kernels/quant.unpack_reconstruct`` — the shared packed-scoring
+primitive), and runs the masked max-over-doc-tokens /
+sum-over-query-tokens reduction in the same pass. HBM traffic per
+candidate token drops from ``dim*4`` reconstruction bytes to
+``4 + W*4`` code bytes (~14x at dim=128, b=2) while the MXU work is
+unchanged — the kernel moves toward the bandwidth bound (see
+``repro.roofline.packed``).
+
+The centroid-row gather happens INSIDE the tile as a one-hot MXU matmul
+(codes -> [M, K] select plane -> [M, dim] rows): Mosaic has no cheap
+dynamic gather from a [K, dim] VMEM table, but K is small (<= 256) so
+the extra matmul is a few percent of the scoring matmul and keeps the
+per-token HBM stream at id+codes bytes. The [K, dim] table and the
+[dim, 2^b] value plane stay VMEM-resident across the whole grid.
+
+Grid/tiling mirrors ``kernels/maxsim.maxsim_rerank_pallas``: one program
+per (query, candidate slab); VMEM high-water at the defaults
+(block_s=8, Ld=256, dim=128, K=256) is ~6 MiB — comfortably under the
+~16 MiB/core of TPU v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quant.kernel import unpack_reconstruct
+
+
+def _maxsim_packed_rerank_kernel(q_ref, qm_ref, w_ref, id_ref, dm_ref,
+                                 c_ref, v_ref, o_ref, *, bits: int):
+    """One query x one slab of its own candidates, scored from codes."""
+    _, Lq, dim = q_ref.shape
+    _, BS, Ld, W = w_ref.shape
+    K = c_ref.shape[0]
+    M = BS * Ld
+    words = w_ref[0].reshape(M, W)
+    ids = id_ref[0].reshape(M, 1)
+    # centroid rows via one-hot MXU matmul (no gather unit involvement)
+    onehot = (ids == jax.lax.broadcasted_iota(jnp.int32, (M, K), 1)
+              ).astype(jnp.float32)
+    rows = jax.lax.dot_general(onehot, c_ref[...].astype(jnp.float32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    d = unpack_reconstruct(words, rows, v_ref[...], bits=bits)  # [M, dim]
+    q = q_ref[0].astype(jnp.float32)                            # [Lq, dim]
+    sim = jax.lax.dot_general(q, d, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    sim = sim.reshape(Lq, BS, Ld)
+    dm = dm_ref[0].reshape(1, BS, Ld)
+    sim = jnp.where(dm, sim, -jnp.inf)
+    best = jnp.max(sim, axis=-1)                     # [Lq, BS]
+    qm = qm_ref[0].reshape(Lq, 1)
+    best = jnp.where(qm & jnp.isfinite(best), best, 0.0)
+    o_ref[0] = jnp.sum(best, axis=0)                 # [BS]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_s", "interpret"))
+def maxsim_packed_rerank_pallas(q, q_mask, words, ids, d_mask, centroids,
+                                values, *, bits: int = 2, block_s: int = 8,
+                                interpret: bool = False):
+    """q [Nq, Lq, dim]; words [Nq, S, Ld, W] uint32 packed codes;
+    ids [Nq, S, Ld] int32 centroid ids; d_mask [Nq, S, Ld];
+    centroids [K, dim]; values [dim, 2^bits]
+    -> scores [Nq, S] f32. S % block_s == 0 (wrapper pads)."""
+    Nq, Lq, dim = q.shape
+    _, S, Ld, W = words.shape
+    K = centroids.shape[0]
+    assert S % block_s == 0, (S, block_s)
+    grid = (Nq, S // block_s)
+    kernel = functools.partial(_maxsim_packed_rerank_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lq, dim), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, Lq), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_s, Ld, W), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, Ld), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_s, Ld), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((K, dim), lambda i, j: (0, 0)),
+            pl.BlockSpec((dim, 1 << bits), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Nq, S), jnp.float32),
+        interpret=interpret,
+    )(q, q_mask, words, ids, d_mask, centroids, values)

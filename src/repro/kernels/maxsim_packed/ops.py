@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the compressed-domain rerank kernel: pads the
+candidate axis to a block multiple, dispatches to the Pallas kernel
+(interpret=True off-TPU), unpads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxsim.ops import _on_tpu, _pad_to
+from repro.kernels.maxsim_packed.kernel import maxsim_packed_rerank_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_s"))
+def maxsim_packed_rerank(q, q_mask, words, ids, d_mask, centroids, values,
+                         *, bits: int = 2, block_s: int = 8):
+    """Per-query candidate scores [Nq, S] straight from packed codes.
+
+    words [Nq, S, Ld, W] packed residual words; ids [Nq, S, Ld] centroid
+    ids; d_mask [Nq, S, Ld] token validity — the per-query gathers of the
+    plaid packed views; centroids [K, dim] / values [dim, 2^bits] are the
+    codec tables. Query i scores only its own slab words[i]."""
+    S = words.shape[1]
+    words = _pad_to(words, 1, block_s)
+    ids = _pad_to(ids, 1, block_s)
+    d_mask = _pad_to(d_mask, 1, block_s)
+    out = maxsim_packed_rerank_pallas(
+        jnp.asarray(q, jnp.float32), q_mask, words.astype(jnp.uint32),
+        ids.astype(jnp.int32), d_mask,
+        jnp.asarray(centroids, jnp.float32),
+        jnp.asarray(values, jnp.float32),
+        bits=bits, block_s=block_s, interpret=not _on_tpu())
+    return out[:, :S]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused compressed-domain rerank kernel.
+
+Literally the composition ``quantization.decode`` -> ``maxsim_rerank_ref``
+op for op (same unpack, same bucket/centroid gathers, same
+``v / max(||v||, 1e-9)`` renormalize, same rerank einsum), so — jitted or
+eager — it reproduces the reconstruction-path scores BITWISE on CPU CI.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.maxsim.ref import maxsim_rerank_ref
+from repro.kernels.quant.ref import unpack_ref
+
+
+def decode_rows_ref(words, ids, centroids, values, bits: int):
+    """Flat decode: words [M, W], ids [M] -> [M, dim] unit reconstructions.
+
+    The exact op sequence of ``core.quantization.decode`` (which itself
+    delegates its unpack here via ``unpack_ref``).
+    """
+    dim = centroids.shape[1]
+    codes = unpack_ref(words, bits, dim)                    # [M, dim]
+    res = values[jnp.arange(dim)[None, :], codes]           # [M, dim]
+    v = centroids[ids] + res
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+
+
+def maxsim_packed_rerank_ref(q, q_mask, words, ids, d_mask, centroids,
+                             values, *, bits: int):
+    """q [Nq, Lq, dim]; words [Nq, S, Ld, W]; ids [Nq, S, Ld];
+    d_mask [Nq, S, Ld] -> scores [Nq, S] f32.
+
+    Masked slots decode to garbage rows, exactly like padded slots in the
+    reconstruction DocStore decode to zero rows — both are forced to
+    -inf before the max, so the scores are identical either way.
+    """
+    Nq, S, Ld, W = words.shape
+    dim = centroids.shape[1]
+    v = decode_rows_ref(words.reshape(-1, W), ids.reshape(-1),
+                        centroids, values, bits)
+    d = v.reshape(Nq, S, Ld, dim)
+    return maxsim_rerank_ref(q, q_mask, d, d_mask)

@@ -9,6 +9,13 @@ The per-dimension bucket lookup values[dim, 2^b] is done WITHOUT a gather:
 2-bit codes select among 4 broadcast value planes via a where-chain —
 pure VPU selects, no scatter/gather unit involvement.
 
+``unpack_reconstruct`` is THE in-tile packed-scoring primitive: both this
+kernel and the fused compressed-domain maxsim rerank kernel
+(kernels/maxsim_packed) build on it, and its arithmetic mirrors
+``core.quantization.decode`` op for op (same normalize formula), so the
+Pallas paths and the jnp reference paths reconstruct identical vectors
+up to float evaluation order.
+
 Tiling: grid over M blocks; values plane + query block resident in VMEM.
 """
 from __future__ import annotations
@@ -20,25 +27,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _dequant_score_kernel(w_ref, c_ref, v_ref, q_ref, o_ref, *, bits: int):
-    BM, W = w_ref.shape
-    dim = c_ref.shape[1]
+def unpack_reconstruct(words, rows, vals, *, bits: int):
+    """In-tile unpack + reconstruct + renormalize (the shared primitive).
+
+    words: [M, W] uint32 packed b-bit codes; rows: [M, dim] pre-gathered
+    centroid rows; vals: [dim, 2^bits] bucket values.
+    Returns [M, dim] f32 unit-renormalized reconstructions.
+    """
+    M, W = words.shape
+    dim = rows.shape[1]
     cpw = 32 // bits
-    words = w_ref[...]                                  # [BM, W] uint32
-    # unpack: [BM, W, cpw] -> [BM, dim]
+    # unpack: [M, W, cpw] -> [M, dim] (little-endian lanes, as pack_codes)
     shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, cpw), 2)
               * jnp.uint32(bits))
     mask = jnp.uint32((1 << bits) - 1)
-    codes = ((words[:, :, None] >> shifts) & mask).reshape(BM, dim)
+    codes = ((words[:, :, None] >> shifts) & mask).reshape(M, dim)
     # bucket values via where-chain over the 2^bits planes
-    vals = v_ref[...]                                   # [dim, 2^bits]
-    res = jnp.zeros((BM, dim), jnp.float32)
+    res = jnp.zeros((M, dim), jnp.float32)
     for b in range(1 << bits):
         res = jnp.where(codes == b, vals[:, b][None, :], res)
-    v = c_ref[...].astype(jnp.float32) + res
-    nrm = jax.lax.rsqrt(jnp.maximum(jnp.sum(v * v, axis=-1, keepdims=True),
-                                    1e-18))
-    v = v * nrm
+    v = rows.astype(jnp.float32) + res
+    nrm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    return v / jnp.maximum(nrm, 1e-9)
+
+
+def _dequant_score_kernel(w_ref, c_ref, v_ref, q_ref, o_ref, *, bits: int):
+    v = unpack_reconstruct(w_ref[...], c_ref[...], v_ref[...], bits=bits)
     q = q_ref[...].astype(jnp.float32)                  # [Lq, dim]
     o_ref[...] = jax.lax.dot_general(v, q, (((1,), (1,)), ((), ())),
                                      preferred_element_type=jnp.float32)

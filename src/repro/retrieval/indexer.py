@@ -45,6 +45,9 @@ class IndexStats:
     n_vectors_raw: int
     n_vectors_stored: int
     index_bytes: int     # real serialized artifact size (core/persist.py)
+    # device-resident bytes of the query-time doc representation (plaid:
+    # packed views + codec; 0 for backends predating the field)
+    device_bytes: int = 0
     # streaming/sharded builds only (defaults keep monolithic stats stable)
     n_shards: int = 1
     peak_buffered_vectors: int = 0   # host-buffer high-water mark
@@ -162,6 +165,7 @@ class Indexer:
             n_vectors_raw=raw,
             n_vectors_stored=index.n_vectors(),
             index_bytes=index_bytes,
+            device_bytes=index.device_bytes(),
         )
         if out_dir is not None:
             with open(os.path.join(out_dir, "stats.json"), "w") as fh:
@@ -259,6 +263,7 @@ class Indexer:
             n_vectors_raw=raw,
             n_vectors_stored=sharded.n_vectors(),
             index_bytes=index_bytes,
+            device_bytes=sharded.device_bytes(),
             n_shards=sharded.n_shards,
             peak_buffered_vectors=peak,
             max_batch_vectors=max_batch,

@@ -178,13 +178,50 @@ def analyse_cell(arch: str, cell: str, *, skip_multipod: bool = False,
     return out
 
 
+def run_packed_rerank(args) -> int:
+    """``--kernel packed_rerank``: roofline rows for the fused
+    compressed-domain rerank kernel vs the reconstruction baseline."""
+    from repro.roofline.packed import packed_rerank_report
+    shape = None
+    if args.rerank_shape:
+        keys = ("nq", "lq", "s", "ld", "dim", "k_centroids")
+        vals = [int(v) for v in args.rerank_shape.split(",")]
+        shape = dict(zip(keys, vals))
+    bits = tuple(int(b) for b in args.bits.split(",") if b)
+    report = packed_rerank_report(shape, bits_list=bits)
+    print(HEADER, flush=True)
+    for row in report["rows"]:
+        print(row.pop("terms").row(), flush=True)
+    for row in report["rows"]:
+        if row["bits"] is not None:
+            print(f"  bits={row['bits']}: "
+                  f"{row['doc_bytes_per_token']} B/token vs "
+                  f"{report['rows'][0]['doc_bytes_per_token']} B/token "
+                  f"recon ({row['doc_bytes_ratio_vs_recon']:.1f}x), "
+                  f"stream ratio {row['bytes_ratio_vs_recon']:.1f}x")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=1)
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--cell", default=None)
     ap.add_argument("--skip-multipod", action="store_true")
+    ap.add_argument("--kernel", default=None, choices=("packed_rerank",),
+                    help="analyse a hand-written kernel instead of the "
+                         "(arch x cell) dry-run grid")
+    ap.add_argument("--bits", default="2,4",
+                    help="packed_rerank: codec widths to price")
+    ap.add_argument("--rerank-shape", default=None,
+                    help="packed_rerank: nq,lq,s,ld,dim,k_centroids")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
+
+    if args.kernel == "packed_rerank":
+        return run_packed_rerank(args)
 
     archs = [args.arch] if args.arch else ASSIGNED_ARCHS
     print(HEADER, flush=True)

@@ -1,0 +1,200 @@
+"""End-to-end compressed-domain rerank: the packed plaid path must be
+indistinguishable from the pre-change reconstruction path (same ids,
+bitwise scores, same tie order) — monolithic, sharded, and through the
+ServingEngine with the no-retrace probe — while never materializing the
+f32 reconstruction store and cutting resident doc-representation bytes.
+
+``packed_rerank=False`` is the legacy twin: it forces the rerank stage
+back through ``recon_store()`` + ``maxsim_rerank_store``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.index import MultiVectorIndex
+from repro.core.sharded import ShardedIndex
+
+DIM = 16
+KW = dict(doc_maxlen=24, n_centroids=16, ndocs=4096)
+
+
+def unit_docs(rng, n=40, dim=DIM, lo=4, hi=20):
+    docs = []
+    for _ in range(n):
+        v = rng.normal(size=(rng.integers(lo, hi), dim)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    return docs
+
+
+def unit_queries(rng, n, lq=5, dim=DIM):
+    q = rng.normal(size=(n, lq, dim)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def assert_bitwise(S0, I0, S1, I1):
+    np.testing.assert_array_equal(I0, I1)
+    assert np.array_equal(np.asarray(S0, np.float32).view(np.int32),
+                          np.asarray(S1, np.float32).view(np.int32)), \
+        "scores drifted bitwise between packed and reconstruction paths"
+
+
+@pytest.mark.parametrize("regime", ["gather", "dense"])
+@pytest.mark.parametrize("bits", [2, 4])
+def test_packed_matches_recon_monolithic(bits, regime):
+    """Same ids, bitwise scores, same tie order as the reconstruction
+    twin — in the candidate-GATHER regime (tight ndocs budget: the
+    packed slab rerank runs) and the DENSE corpus-wide regime (candidate
+    width reaches n_docs: both twins share the recon-backed scan)."""
+    rng = np.random.default_rng(bits)
+    if regime == "gather":
+        n, kw = 150, dict(doc_maxlen=24, n_centroids=32, ndocs=16)
+    else:
+        n, kw = 50, KW
+    docs = unit_docs(rng, n=n)
+    packed = MultiVectorIndex(dim=DIM, backend="plaid", quant_bits=bits,
+                              **kw)
+    packed.add(docs)
+    legacy = MultiVectorIndex(dim=DIM, backend="plaid", quant_bits=bits,
+                              packed_rerank=False, **kw)
+    legacy.set_codec(packed._plaid.codec)   # identical quantization model
+    legacy.add(docs)
+    qs = unit_queries(rng, 8)
+    S0, I0 = legacy.search_batch(qs, k=10)
+    S1, I1 = packed.search_batch(qs, k=10)
+    assert_bitwise(S0, I0, S1, I1)
+    if regime == "gather":
+        # the packed index never decoded; the legacy twin had to
+        assert packed._plaid.recon is None
+        assert legacy._plaid.recon is not None
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_packed_matches_recon_sharded(bits):
+    """Sharded packed == monolithic reconstruction twin (exhaustive
+    candidate regime, one shared codec — the parity contract)."""
+    rng = np.random.default_rng(10 + bits)
+    docs = unit_docs(rng, n=24)
+    total = sum(len(d) for d in docs)
+    cap = max(total // 3, max(len(d) for d in docs), 1)
+    sharded = ShardedIndex(dim=DIM, backend="plaid", quant_bits=bits,
+                           shard_max_vectors=cap, **KW)
+    sharded.add(docs)
+    assert sharded.n_shards >= 2
+    legacy = MultiVectorIndex(dim=DIM, backend="plaid", quant_bits=bits,
+                              packed_rerank=False, **KW)
+    legacy.set_codec(sharded.codec())
+    legacy.add(docs)
+    qs = unit_queries(rng, 4)
+    S0, I0 = legacy.search_batch(qs, k=8)
+    S1, I1 = sharded.search_batch(qs, k=8)
+    assert_bitwise(S0, I0, S1, I1)
+    # flipping every shard to the legacy path must change nothing either
+    for s in sharded.shards:
+        s.packed_rerank = False
+    S2, I2 = sharded.search_batch(qs, k=8)
+    assert_bitwise(S1, I1, S2, I2)
+
+
+def test_packed_prune_path_leaves_recon_unbuilt():
+    """Under a tight ndocs budget (stage-3 prune engages, candidate
+    width stays below corpus size) serving runs entirely in the
+    compressed domain: searches, adds, deletes — recon stays None."""
+    rng = np.random.default_rng(3)
+    docs = unit_docs(rng, n=120)
+    idx = MultiVectorIndex(dim=DIM, backend="plaid", doc_maxlen=24,
+                           n_centroids=32, ndocs=16)
+    idx.add(docs)
+    qs = unit_queries(rng, 6)
+    S, I = idx.search_batch(qs, k=5)
+    assert (I >= 0).any()
+    idx.add(unit_docs(rng, n=4))
+    idx.delete([0, 7])
+    idx.search_batch(qs, k=5)
+    assert idx._plaid.recon is None, \
+        "packed serving materialized the reconstruction store"
+
+
+def test_device_bytes_and_nbytes_accounting():
+    """Satellite: the 2-bit packed representation is >= 8x smaller than
+    the f32 reconstruction view it replaces, and nbytes() no longer
+    hides a resident recon cache."""
+    rng = np.random.default_rng(4)
+    docs = unit_docs(rng, n=60, dim=128, lo=8, hi=24)
+    idx = MultiVectorIndex(dim=128, backend="plaid", doc_maxlen=32,
+                           n_centroids=16, quant_bits=2, ndocs=4096)
+    idx.add(docs)
+    detail = idx._plaid.device_bytes_detail()
+    assert detail["recon"] == 0
+    assert idx.device_bytes() == sum(detail.values())
+    host_before = idx.nbytes()
+    idx._plaid.recon_store()                 # force the legacy residency
+    detail2 = idx._plaid.device_bytes_detail()
+    assert detail2["recon"] / detail["packed"] >= 8.0, detail2
+    assert idx.device_bytes() > sum(detail.values())
+    assert idx.nbytes() > host_before, \
+        "nbytes() silently excludes the resident recon cache"
+
+
+def test_indexstats_device_bytes_round_trip():
+    """IndexStats carries device_bytes and it survives to_json."""
+    from repro.retrieval.indexer import IndexStats
+    stats = IndexStats(n_docs=2, n_vectors_raw=10, n_vectors_stored=5,
+                       index_bytes=100, device_bytes=37)
+    assert stats.to_json()["device_bytes"] == 37
+
+
+def test_spec_rejects_unsupported_bits():
+    from repro.core.spec import IndexSpec
+    for bad in (0, 1, 3, 8):
+        with pytest.raises(ValueError):
+            IndexSpec(backend="plaid", quant_bits=bad)
+    for ok in (2, 4):
+        spec = IndexSpec(backend="plaid", quant_bits=ok)
+        assert spec.params()["quant_bits"] == ok   # persisted losslessly
+
+
+# --------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def plaid_searcher():
+    """Real encode -> pool -> PLAID index -> Searcher (smoke config)."""
+    import jax
+    from dataclasses import replace
+    from repro.configs import get_smoke_config
+    from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+    from repro.models.colbert import init_colbert
+    from repro.retrieval.indexer import Indexer
+    from repro.retrieval.searcher import Searcher
+
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    # 44 docs / k=11 probe: deliberately DISTINCT from the 40-doc / k=9
+    # shapes test_serving_engine.py's cold-probe sanity check relies on
+    # compiling fresh (module-level jitted fns share one process-wide
+    # cache; duplicating those shapes here would blind that probe)
+    spec = replace(DATASET_SPECS["scifact"], n_docs=44, n_queries=32)
+    corpus = SyntheticRetrievalCorpus(spec, vocab_size=cfg.trunk.vocab_size)
+    indexer = Indexer(params, cfg, pool_method="ward", pool_factor=2,
+                      backend="plaid")
+    index, stats = indexer.build(corpus.doc_token_batch(cfg.doc_maxlen - 2))
+    assert stats.device_bytes == index.device_bytes() > 0
+    return (Searcher(params, cfg, index),
+            corpus.query_token_batch(cfg.query_maxlen - 2))
+
+
+def test_engine_packed_no_retrace_mixed_stream(plaid_searcher):
+    """After warmup, a mixed-shape request stream over the packed plaid
+    path compiles NOTHING new — warm_shapes pre-traces the packed
+    candidate-width ladder exactly like the old reconstruction ladder."""
+    from repro.launch.engine import CompileCounter, ServingEngine
+    searcher, q_all = plaid_searcher
+    with CompileCounter() as cold:
+        searcher.search(q_all[:5], k=11)
+    assert cold.count > 0, "compile probe is not observing compilations"
+    with ServingEngine(searcher, max_batch=8, max_wait_ms=1.0, k=10) as eng:
+        with CompileCounter() as c:
+            futs = [eng.submit(q_all[i:i + n])
+                    for i, n in [(0, 3), (3, 1), (4, 5), (9, 2), (11, 8)]]
+            for fut in futs:
+                fut.result(timeout=60)
+        assert c.count == 0, f"{c.count} re-traces in packed engine stream"
+    assert eng.stats.snapshot()["failed"] == 0

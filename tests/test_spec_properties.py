@@ -34,7 +34,7 @@ def retriever_specs(draw):
             backend=backend,
             doc_maxlen=draw(st.integers(8, 512)),
             n_centroids=draw(st.integers(1, 1024)),
-            quant_bits=draw(st.sampled_from((1, 2, 4))),
+            quant_bits=draw(st.sampled_from((2, 4))),
             nprobe=draw(st.integers(1, 64)),
             t_cs=draw(st.floats(0.0, 1.0, allow_nan=False)),
             ndocs=draw(st.integers(1, 1 << 20)),
