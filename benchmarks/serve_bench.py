@@ -139,7 +139,8 @@ def _count_mismatches(results, q_all, S_ref, I_ref):
 
 def engine_cell(searcher, index, q_all, backend: str, pool_factor: int,
                 bs1_row: dict, n_queries: int, k: int,
-                rate_mult: float, max_batch: int, max_wait_ms: float):
+                rate_mult: float, max_batch: int, max_wait_ms: float,
+                n_replicas: int = 1):
     """Two open-loop runs at ``rate_mult`` x the closed-loop batch-1 QPS
     (capped at 80% of the engine's probed capacity so the cell measures
     steady state, not unbounded overload):
@@ -173,7 +174,7 @@ def engine_cell(searcher, index, q_all, backend: str, pool_factor: int,
     # ---- run 1: steady state -------------------------------------------
     engine = ServingEngine(searcher, max_batch=max_batch,
                            max_wait_ms=max_wait_ms, k=k,
-                           warmup_on_start=False)
+                           warmup_on_start=False, n_replicas=n_replicas)
     with engine:
         row = run_open_loop(engine, q_all, rate, n_queries, k=k,
                             collect_results=True)
@@ -209,7 +210,7 @@ def engine_cell(searcher, index, q_all, backend: str, pool_factor: int,
 
     row.update({
         "backend": backend, "pool_factor": pool_factor,
-        "rate_mult": rate_mult,
+        "rate_mult": rate_mult, "n_replicas": n_replicas,
         "engine_capacity_qps": capacity,
         "bs1_qps": bs1_row["qps"], "bs1_p99_ms": bs1_row["p99_ms"],
         "speedup_vs_bs1": row["achieved_qps"] / bs1_row["qps"],
@@ -374,7 +375,8 @@ def main(argv=None):
                          "in --pool-factors)")
     # engine knobs (--max-batch/--max-wait-ms/--k) derive from the
     # typed ServeSpec (core/spec.py), same as launch/serve.py
-    add_spec_args(ap, ServeSpec, only=("max_batch", "max_wait_ms", "k"))
+    add_spec_args(ap, ServeSpec,
+                  only=("max_batch", "max_wait_ms", "k", "n_replicas"))
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--compress-grid", action="store_true",
                     help="run the (quant bits x pool factor) "
@@ -417,7 +419,8 @@ def main(argv=None):
                 engine_rows.append(engine_cell(
                     searcher, index, q_all, backend, f, bs1,
                     args.engine_queries, args.k, args.engine_rate_mult,
-                    args.max_batch, args.max_wait_ms))
+                    args.max_batch, args.max_wait_ms,
+                    n_replicas=args.n_replicas))
 
     # headline: batch-32 QPS vs the sequential-equivalent 1/p50(batch-1)
     speedups = {}

@@ -83,7 +83,8 @@ def _build_multi_vector(params, cfg, docs, spec: RetrieverSpec,
     if spec.shard.sharded:
         return indexer.build_streaming(
             docs, shard_max_vectors=int(spec.shard.shard_max_vectors),
-            out_dir=out_dir)
+            out_dir=out_dir,
+            probe_threads=int(spec.shard.probe_threads))
     return indexer.build(_as_token_array(docs), out_dir=out_dir)
 
 

@@ -316,30 +316,24 @@ class MultiVectorIndex:
             return self._rerank_dense(qs, cand, cand_mask, q_mask), None
         return self.rerank(qs, cand, cand_mask, q_mask), cand
 
-    def warm_shapes(self, qs: np.ndarray, k: int = 10) -> None:
-        """Pre-compile every executable a serving stream at this query
-        batch shape can hit — including the CANDIDATE-width axis.
+    def candidate_widths(self, qs: np.ndarray
+                         ) -> Tuple[List[int], bool]:
+        """Slate widths a stream at this batch shape can reach.
 
-        ``search_batch`` shapes depend on data: stage 1 yields a padded
-        candidate matrix whose width C is the geometric ladder
-        {32, 64, 128, ...} (``pad_candidate_sets``) or the dense
-        corpus-wide path once C reaches ``n_docs``. A width first seen
-        mid-stream costs an XLA compile (hundreds of ms on CPU) that
-        lands straight in some query's tail latency. Serving runtimes
-        (launch/engine.py) call this at warmup per shape bucket so the
-        whole ladder is traced before traffic."""
-        qs = np.asarray(qs, np.float32)
+        Returns ``(widths, dense)``: the geometric pad ladder
+        {32, 64, ...} (``pad_candidate_sets``) capped by the stage-1
+        candidate budget (plaid: ndocs before the prune; hnsw: the
+        token-probe hit bound) plus plaid's post-prune block-padded
+        width, RESTRICTED to widths below ``n_docs`` — wider sets
+        dispatch to the dense corpus-wide path, whose reachability is
+        the ``dense`` flag. The contract ``warm_shapes`` and the
+        sharded/replicated merge warms trace against.
+        """
         if self.n_docs == 0:
-            return
-        self.search_batch(qs, k=k)          # stage-1 + one organic path
+            return [], False
         if self.backend == "flat":
-            return                          # dense only: already warm
-        # Reachable widths only: the geometric pad ladder up to the
-        # stage-1 candidate budget (plaid: ndocs before the prune caps
-        # it; hnsw: the token-probe hit bound), plus plaid's pruned
-        # width (block-padded ndocs — NOT a ladder value in general).
-        # Widths >= n_docs dispatch to the dense path instead.
-        Nq = len(qs)
+            return [], True                 # dense only
+        qs = np.asarray(qs, np.float32)
         block = 32                          # pad_candidate_sets block
         if self.backend == "plaid":
             cap = min(self.n_docs, self.ndocs)
@@ -355,23 +349,43 @@ class MultiVectorIndex:
         widths.add(C)                       # first ladder value >= cap
         if self.backend == "plaid":         # post-prune width
             widths.add(-(-min(self.ndocs, self.n_docs) // block) * block)
-        for C in sorted(widths):
-            if C >= self.n_docs:
-                continue                    # served by the dense path
+        return (sorted(w for w in widths if w < self.n_docs),
+                max(widths) >= self.n_docs)
+
+    def warm_shapes(self, qs: np.ndarray, k: int = 10) -> None:
+        """Pre-compile every executable a serving stream at this query
+        batch shape can hit — including the CANDIDATE-width axis.
+
+        ``search_batch`` shapes depend on data: stage 1 yields a padded
+        candidate matrix whose width C walks ``candidate_widths`` or
+        the dense corpus-wide path once C reaches ``n_docs``. A width
+        first seen mid-stream costs an XLA compile (hundreds of ms on
+        CPU) that lands straight in some query's tail latency. Serving
+        runtimes (launch/engine.py) call this at warmup per shape
+        bucket so the whole ladder is traced before traffic."""
+        qs = np.asarray(qs, np.float32)
+        if self.n_docs == 0:
+            return
+        self.search_batch(qs, k=k)          # stage-1 + one organic path
+        if self.backend == "flat":
+            return                          # dense only: already warm
+        Nq = len(qs)
+        widths, dense = self.candidate_widths(qs)
+        for C in widths:
             cand = np.zeros((Nq, C), np.int64)   # doc 0: shape-only work
             mask = np.ones((Nq, C), bool)
             scores = self.rerank(qs, cand, mask)
             topk_with_pads(scores, cand, k)
         if self.backend == "plaid" and self._plaid is not None:
             self._warm_plaid_prune(qs)
-        if max(widths) >= self.n_docs:
+        if dense:
             # dense corpus-wide fallback is reachable (a candidate set
             # can grow to corpus width) — warm the full dense-candidate
             # path (_rerank_dense: corpus scan + membership mask), not
             # just the bare scan; when the budget caps far below n_docs,
             # skip: it would materialize the whole padded corpus for an
             # executable traffic never hits
-            C = max(widths)
+            C = max(widths, default=32)
             scores = self._rerank_dense(qs, np.zeros((Nq, C), np.int64),
                                         np.ones((Nq, C), bool), None)
             topk_with_pads(scores, None, k)

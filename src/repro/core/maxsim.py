@@ -129,6 +129,37 @@ def topk_with_pads(scores, cand, k: int):
     return top_s.astype(np.float32), ids.astype(np.int64)
 
 
+def topk_shard(scores, cand, k: int, base: int = 0):
+    """Device-side per-shard top-k: the unit a sharded/replicated merge
+    keeps ON DEVICE so full-width slates never cross the host boundary.
+
+    scores: [Nq, C] (-inf marks invalid slots, device array); cand:
+    [Nq, C] local doc ids (host or device) or None when scores are
+    corpus-wide (ids = column index). Returns (top scores [Nq, kk] f32,
+    GLOBAL ids [Nq, kk] i32) with kk = min(k, C), both device-resident
+    on ``scores``' device. Ids are ``cand``-gathered (or the column
+    index) shifted by ``base``; slots whose score is -inf carry a
+    meaningless id — the final merge epilogue (``topk_with_pads``) maps
+    non-finite slots to -1, exactly as the monolithic path does.
+
+    Keeping per-shard top-k is lossless for a global top-k: any shard
+    contributes at most k winners, and ``jax.lax.top_k`` orders ties by
+    lowest position, so local-top-k-then-merge reproduces the single
+    concat-then-top-k bit for bit (scores, ids, AND tie order).
+
+    Ids are i32 on device (x64 is off by default); global doc ids past
+    2**31 are out of scope for this layout.
+    """
+    import numpy as np
+    kk = min(k, scores.shape[1])
+    top_s, top_i = jax.lax.top_k(scores, kk)
+    off = jnp.int32(base)
+    if cand is None:
+        return top_s, top_i.astype(jnp.int32) + off
+    c = jnp.asarray(np.asarray(cand, np.int32))
+    return top_s, jnp.take_along_axis(c, top_i, axis=1) + off
+
+
 def maxsim_rerank(q, q_mask, d, d_mask):
     """Per-query gathered-candidate scores [Nq, S] (one traced batch)."""
     if _on_tpu():

@@ -469,6 +469,10 @@ def finalize_sharded(sharded, path: str,
         "params": dict(sharded.index_kw),
         "shards": entries,
     }
+    # a PINNED probe width is part of the layout contract (auto stays
+    # unrecorded so pre-existing artifacts round-trip byte-identically)
+    if int(getattr(sharded, "probe_threads_cfg", 0)) > 0:
+        meta["probe_threads"] = int(sharded.probe_threads_cfg)
     if extra_meta:
         meta.update(extra_meta)
     return write_artifact(path, meta, {})
@@ -497,6 +501,7 @@ def load_sharded(path: str, mmap: bool = True):
             dim=int(_require(manifest, "dim", path)),
             backend=_require(manifest, "backend", path),
             shard_max_vectors=int(manifest.get("shard_max_vectors", 0)),
+            probe_threads=int(manifest.get("probe_threads", 0)),
             **dict(manifest.get("params", {})))
     shards, bases = [], []
     base = 0
@@ -514,7 +519,8 @@ def load_sharded(path: str, mmap: bool = True):
         base += shard.n_docs
     out = ShardedIndex.from_parts(
         shards, bases,
-        shard_max_vectors=int(manifest.get("shard_max_vectors", 0)))
+        shard_max_vectors=int(manifest.get("shard_max_vectors", 0)),
+        probe_threads=int(manifest.get("probe_threads", 0)))
     return out
 
 

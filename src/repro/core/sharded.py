@@ -16,41 +16,55 @@ partition:
   * ``delete`` maps global ids -> owning shard via the doc_base table
     (one ``searchsorted``, no per-id loop);
   * ``search_batch`` fans the batched two-stage engine out per shard —
-    each shard produces its exact-MaxSim *scored slate*
-    (``MultiVectorIndex.scored_candidates``) — and a shared device-side
-    merge concatenates the slates along the candidate axis and takes ONE
-    global top-k. Slates are concatenated in shard order with ascending
-    local ids inside, so merged tie-breaking (lowest global id first)
-    matches the monolithic index bit-for-bit.
+    each shard produces its exact-MaxSim scored slate
+    (``MultiVectorIndex.scored_candidates``) and immediately reduces it
+    to a DEVICE-RESIDENT local top-k with global ids
+    (``maxsim.topk_shard``) — then the merge concatenates the [Nq, k]
+    blocks in shard order and takes one global top-k. Full-width slates
+    (up to corpus-wide for dense shards) never cross the host boundary;
+    only k entries per shard move, device-to-device when shards are
+    placed (``place``). Per-shard top-k is lossless for the global
+    top-k (a shard contributes at most k winners) and ``lax.top_k``
+    orders ties by lowest position, so the merged result — ids, scores,
+    AND tie order — is bit-identical to concat-then-top-k and therefore
+    to the monolithic index.
 
-Parity contract (locked by tests/test_sharded*.py): with every backend's
-candidate stage exhaustive (flat always; hnsw_candidates / plaid nprobe +
-ndocs generous) and — for plaid — one codec shared across shards
-(``MultiVectorIndex.set_codec``; the streaming builder trains it on the
-first shard), ``search_batch`` returns exactly the monolithic result:
-same ids, same scores, same tie order.
+Parity contract (locked by tests/test_sharded*.py + test_replicated*):
+with every backend's candidate stage exhaustive (flat always;
+hnsw_candidates / plaid nprobe + ndocs generous) and — for plaid — one
+codec shared across shards (``MultiVectorIndex.set_codec``; the
+streaming builder trains it on the first shard), ``search_batch``
+returns exactly the monolithic result: same ids, same scores, same tie
+order.
 
-Shard probing fans out on a thread pool (``probe_threads``): stage 1 is
-host-bound numpy for hnsw/plaid, so K shards probe concurrently while
-the merge stays deterministic — slates are collected back in shard
-order, so results are identical to the sequential fan-out. Per-shard
-probe times are returned per call by ``search_batch_with_stats``
-(concurrent batches each get their own timings); ``last_probe_s`` keeps
-the last call's timings as a convenience snapshot, written in one
-atomic assignment so a concurrent reader never sees a half-built list.
+Shard probing fans out on a thread pool (``probe_threads``; 0 = auto =
+``min(8, cpu_count)``, pinnable via ``ShardSpec.probe_threads``):
+stage 1 is host-bound numpy for hnsw/plaid, so K shards probe
+concurrently while the merge stays deterministic — per-shard top-k
+blocks are collected back in shard order, so results are identical to
+the sequential fan-out. When shards are ``place``d on devices
+(core/replicated.py), each shard's stage-2 executables and lazy device
+caches commit to its own device, so the fan-out is device-parallel,
+not just thread-parallel. Per-shard probe times are returned per call
+by ``search_batch_with_stats`` (concurrent batches each get their own
+timings); ``last_probe_s`` keeps the last call's timings as a
+convenience snapshot, written in one atomic assignment so a concurrent
+reader never sees a half-built list.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import BACKENDS, PARAM_KEYS, MultiVectorIndex
-from repro.core.maxsim import topk_with_pads
+from repro.core.maxsim import topk_shard, topk_with_pads
 
 # shard construction knobs forwarded verbatim to MultiVectorIndex — the
 # same set the persistence manifest records (one definition for all
@@ -58,11 +72,21 @@ from repro.core.maxsim import topk_with_pads
 SHARD_PARAM_KEYS = PARAM_KEYS
 
 
+def _resolve_probe_threads(probe_threads: int) -> int:
+    """0 = auto (the historical ``min(8, cpu_count)`` default)."""
+    pt = int(probe_threads)
+    if pt < 0:
+        raise ValueError(f"probe_threads must be >= 0 (0 = auto), "
+                         f"got {probe_threads!r}")
+    return pt if pt > 0 else min(8, os.cpu_count() or 1)
+
+
 class ShardedIndex:
     """One logical multi-vector index over capped on-disk/in-memory shards."""
 
     def __init__(self, dim: int, backend: str = "plaid",
-                 shard_max_vectors: int = 0, **index_kw):
+                 shard_max_vectors: int = 0, probe_threads: int = 0,
+                 **index_kw):
         assert backend in BACKENDS, backend
         unknown = set(index_kw) - set(SHARD_PARAM_KEYS)
         assert not unknown, f"unknown shard params {sorted(unknown)}"
@@ -73,7 +97,14 @@ class ShardedIndex:
         self.shards: List[MultiVectorIndex] = []
         self.doc_base: List[int] = []
         self.last_probe_s: List[float] = []
-        self.probe_threads = min(8, os.cpu_count() or 1)
+        # the SPEC value (0 = auto) persists through manifests; the
+        # resolved worker count drives the pool
+        self.probe_threads = _resolve_probe_threads(probe_threads)
+        self.probe_threads_cfg = int(probe_threads)
+        # per-shard jax devices (core/replicated.py ``place``); None =
+        # default device for everything
+        self.shard_devices: Optional[List] = None
+        self._closed = False
         # created eagerly (no threads spawn until first submit) so
         # concurrent first searches can't race a lazy init; close()
         # releases the workers when the index is retired
@@ -84,7 +115,8 @@ class ShardedIndex:
     @classmethod
     def from_parts(cls, shards: Sequence[MultiVectorIndex],
                    doc_base: Sequence[int],
-                   shard_max_vectors: int = 0) -> "ShardedIndex":
+                   shard_max_vectors: int = 0,
+                   probe_threads: int = 0) -> "ShardedIndex":
         """Adopt already-built shards (persistence / streaming build).
 
         ``doc_base`` must be the cumulative doc counts: base[0] == 0 and
@@ -96,7 +128,8 @@ class ShardedIndex:
               if first is not None else {})
         self = cls(dim=(first.dim if first is not None else 0),
                    backend=(first.backend if first is not None else "flat"),
-                   shard_max_vectors=shard_max_vectors, **kw)
+                   shard_max_vectors=shard_max_vectors,
+                   probe_threads=probe_threads, **kw)
         base = 0
         for s, b in zip(shards, doc_base):
             assert s.backend == self.backend and s.dim == self.dim
@@ -129,11 +162,15 @@ class ShardedIndex:
         return sum(s.device_bytes() for s in self.shards)
 
     def shard_of(self, doc_ids: np.ndarray) -> np.ndarray:
-        """Global doc ids -> owning shard index (vectorized)."""
+        """Global doc ids -> owning shard index (vectorized). An empty
+        id array is a well-typed no-op — an empty int array back — even
+        on an empty index (the CRUD paths route nothing)."""
         ids = np.asarray(doc_ids, np.int64)
+        if ids.size == 0:
+            return np.zeros(ids.shape, np.int64)
         if not self.shards:
             raise IndexError("empty sharded index")
-        if ids.size and (ids.min() < 0 or ids.max() >= self.n_docs):
+        if ids.min() < 0 or ids.max() >= self.n_docs:
             raise IndexError(f"doc id out of range [0, {self.n_docs})")
         return np.searchsorted(np.asarray(self.doc_base, np.int64), ids,
                                side="right") - 1
@@ -145,6 +182,38 @@ class ShardedIndex:
                 return s._plaid.codec
         return None
 
+    # ------------------------------------------------------------- placement
+    def place(self, devices: Optional[Sequence]) -> None:
+        """Pin shard ``s``'s stage-2 compute — and the device caches it
+        builds lazily (padded stores, packed code views) — to
+        ``devices[s]``. ``None`` clears placement (default device).
+        The next ``warm_shapes`` traces per placed device; results are
+        bitwise identical wherever shards land (the merge re-collects
+        in shard order)."""
+        if devices is None:
+            self.shard_devices = None
+            return
+        devices = list(devices)
+        assert len(devices) == len(self.shards), \
+            (len(devices), len(self.shards))
+        self.shard_devices = devices
+
+    def _shard_device(self, i: int):
+        return self.shard_devices[i] if self.shard_devices else None
+
+    def set_probe_threads(self, probe_threads: int) -> None:
+        """Re-pin the probe fan-out width after construction — e.g. the
+        serving router divides the auto default across replica lanes so
+        ``lanes x probe_threads`` never oversubscribes the host. Swaps
+        in a fresh pool; in-flight probes finish on the old one."""
+        new = _resolve_probe_threads(probe_threads)
+        old = self._pool
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(new, 1), thread_name_prefix="shard-probe")
+        self.probe_threads = new
+        self.probe_threads_cfg = int(probe_threads)
+        old.shutdown(wait=False)
+
     # ----------------------------------------------------------------- build
     def _new_shard(self) -> MultiVectorIndex:
         shard = MultiVectorIndex(dim=self.dim, backend=self.backend,
@@ -155,13 +224,16 @@ class ShardedIndex:
                 shard.set_codec(codec)
         self.doc_base.append(self.n_docs)
         self.shards.append(shard)
+        if self.shard_devices is not None:      # growth drops placement
+            self.shard_devices = None
         return shard
 
     def add(self, doc_vectors: List[np.ndarray]) -> np.ndarray:
         """Append docs; spills into new shards at ``shard_max_vectors``.
 
         Returns GLOBAL doc ids — contiguous, in input order, regardless
-        of how the docs land on shards.
+        of how the docs land on shards. An empty input is a no-op
+        returning an empty id array.
         """
         doc_vectors = [np.asarray(v, np.float32).reshape(-1, self.dim)
                        for v in doc_vectors]
@@ -214,32 +286,56 @@ class ShardedIndex:
     # ----------------------------------------------------------------- search
     def warm_shapes(self, qs: np.ndarray, k: int = 10) -> None:
         """Pre-compile the candidate-width ladder on every shard plus
-        the merged top-k for this batch shape (serving warmup)."""
-        for shard in self.shards:
-            shard.warm_shapes(qs, k=k)
+        the per-shard device top-k (``topk_shard``) at every reachable
+        slate width AND the merged top-k for this batch shape (serving
+        warmup). Runs under each shard's placed device, so per-device
+        executable caches fill before traffic."""
+        qs = np.asarray(qs, np.float32)
+        Nq = len(qs)
+        for i, (base, shard) in enumerate(zip(self.doc_base, self.shards)):
+            dev = self._shard_device(i)
+            ctx = (jax.default_device(dev) if dev is not None
+                   else contextlib.nullcontext())
+            with ctx:
+                shard.warm_shapes(qs, k=k)
+                if shard.n_docs == 0:
+                    continue
+                widths, dense = shard.candidate_widths(qs)
+                for C in widths:
+                    topk_shard(jnp.full((Nq, C), -jnp.inf, jnp.float32),
+                               np.zeros((Nq, C), np.int64), k, base)
+                if dense:
+                    topk_shard(jnp.full((Nq, shard.n_docs), -jnp.inf,
+                                        jnp.float32), None, k, base)
         self.search_batch(qs, k=k)
 
     def _probe_shard(self, base: int, shard: MultiVectorIndex,
-                     qs: np.ndarray, q_mask, Nq: int):
-        """One shard's scored slate with GLOBAL ids, plus its probe wall
-        time — the unit the thread pool fans out."""
+                     qs: np.ndarray, q_mask, k: int, dev=None):
+        """One shard's device-resident local top-k with GLOBAL ids, plus
+        its probe wall time — the unit the thread pool fans out. Under
+        ``dev`` (when placed) every device array this touches — the
+        shard's lazy caches included — commits to that device."""
         t0 = time.perf_counter()
-        scores, cand = shard.scored_candidates(qs, q_mask)
+        ctx = (jax.default_device(dev) if dev is not None
+               else contextlib.nullcontext())
+        with ctx:
+            scores, cand = shard.scored_candidates(qs, q_mask)
+            top_s, top_i = topk_shard(scores, cand, k, base)
         dt = time.perf_counter() - t0
-        if cand is None:                # corpus-wide slate: ids = columns
-            gids = np.broadcast_to(
-                base + np.arange(shard.n_docs, dtype=np.int64),
-                (Nq, shard.n_docs))
-        else:
-            gids = np.asarray(cand, np.int64) + base
-        return scores, gids, dt
+        return top_s, top_i, dt
 
     def close(self) -> None:
         """Release the probe thread pool (idempotent). Called when a
         serving runtime retires a hot-swapped-out generation — without
         it, every swapped-in sharded index would leak its workers for
-        the life of the process."""
+        the life of the process. A closed index still serves (the
+        fan-out degrades to sequential probing)."""
+        self._closed = True
         self._pool.shutdown(wait=False)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def search_batch_with_stats(
             self, qs: np.ndarray, k: int = 10,
@@ -248,41 +344,52 @@ class ShardedIndex:
         """``search_batch`` plus this call's per-shard probe seconds.
 
         Fan-out: each live shard runs candidates + exact rerank and
-        yields its scored slate — on the shard thread pool when more
-        than one live shard and ``probe_threads > 1`` (stage 1 is
-        host-bound numpy for hnsw/plaid, so shards probe concurrently).
-        Merge: slates are collected IN SHARD ORDER, concatenate along
-        the candidate axis (local ids shifted by the shard's doc_base),
-        and one shared device-side top-k picks the global winners —
-        thread scheduling can never reorder the merge, so results match
-        the sequential fan-out exactly. Probe times are per-call state:
-        concurrent batches each get their own list (the thread-safety
-        contract ``last_probe_s`` alone could not provide).
+        reduces its scored slate to a device-local top-k with global
+        ids — on the shard thread pool when more than one live shard
+        and ``probe_threads > 1`` (stage 1 is host-bound numpy for
+        hnsw/plaid, so shards probe concurrently), each under its
+        placed device when ``place``d. Merge: the [Nq, k] blocks are
+        collected IN SHARD ORDER, moved device-to-device onto the first
+        live shard's device (a no-op when unplaced), concatenated along
+        the candidate axis, and one shared top-k picks the global
+        winners — thread scheduling can never reorder the merge, and
+        per-shard top-k loses no candidate a global top-k could keep,
+        so results match the sequential concat-everything fan-out
+        exactly. Probe times are per-call state: concurrent batches
+        each get their own list (the thread-safety contract
+        ``last_probe_s`` alone could not provide).
         """
         qs = np.asarray(qs, np.float32)
         Nq = len(qs)
-        live = [(base, shard) for base, shard in
-                zip(self.doc_base, self.shards) if shard.n_docs > 0]
-        if len(live) > 1 and self.probe_threads > 1:
+        live = [(base, shard, self._shard_device(i))
+                for i, (base, shard) in enumerate(
+                    zip(self.doc_base, self.shards)) if shard.n_docs > 0]
+        if len(live) > 1 and self.probe_threads > 1 and not self._closed:
             futs = [self._pool.submit(self._probe_shard, base, shard,
-                                      qs, q_mask, Nq)
-                    for base, shard in live]
-            slates = [f.result() for f in futs]
+                                      qs, q_mask, k, dev)
+                    for base, shard, dev in live]
+            parts = [f.result() for f in futs]
         else:
-            slates = [self._probe_shard(base, shard, qs, q_mask, Nq)
-                      for base, shard in live]
+            parts = [self._probe_shard(base, shard, qs, q_mask, k, dev)
+                     for base, shard, dev in live]
         probe_s = []
-        it = iter(slates)
-        for base, shard in zip(self.doc_base, self.shards):
+        it = iter(parts)
+        for shard in self.shards:
             probe_s.append(0.0 if shard.n_docs == 0 else next(it)[2])
-        if not slates:
+        if not parts:
             return (np.full((Nq, k), -np.inf, np.float32),
                     np.full((Nq, k), -1, np.int64), probe_s)
-        merged = (slates[0][0] if len(slates) == 1
-                  else jnp.concatenate([s[0] for s in slates], axis=1))
-        ids = (slates[0][1] if len(slates) == 1
-               else np.concatenate([s[1] for s in slates], axis=1))
-        S, I = topk_with_pads(merged, ids, k)
+        if len(parts) == 1:
+            top_s, top_i = parts[0][0], parts[0][1]
+        else:
+            md = live[0][2]             # merge device (None = default)
+            ss = [p[0] if md is None else jax.device_put(p[0], md)
+                  for p in parts]
+            ii = [p[1] if md is None else jax.device_put(p[1], md)
+                  for p in parts]
+            top_s = jnp.concatenate(ss, axis=1)
+            top_i = jnp.concatenate(ii, axis=1)
+        S, I = topk_with_pads(top_s, top_i, k)
         return S, I, probe_s
 
     def search_batch(self, qs: np.ndarray, k: int = 10,

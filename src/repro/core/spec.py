@@ -320,11 +320,18 @@ class ShardSpec(_SpecBase):
     shard_max_vectors: int = field(default=0, metadata={
         "help": "build via the streaming path, flushing a new shard "
                 "every N pooled vectors (0 = monolithic)"})
+    probe_threads: int = field(default=0, metadata={
+        "help": "stage-1 probe workers per sharded index "
+                "(0 = auto: min(8, cores); replica routing divides the "
+                "auto width across lanes)"})
 
     def __post_init__(self):
         if int(self.shard_max_vectors) < 0:
             raise ValueError(f"shard_max_vectors must be >= 0, got "
                              f"{self.shard_max_vectors!r}")
+        if int(self.probe_threads) < 0:
+            raise ValueError(f"probe_threads must be >= 0, got "
+                             f"{self.probe_threads!r}")
 
     @property
     def sharded(self) -> bool:
@@ -349,11 +356,17 @@ class ServeSpec(_SpecBase):
         "help": "encode/search overlap depth (None = auto by cores)"})
     warmup_on_start: bool = field(default=True, metadata={
         "cli": False, "help": "trace all shape buckets at start()"})
+    n_replicas: int = field(default=1, metadata={
+        "help": "replica groups the engine routes microbatches across "
+                "(core/replicated.py; 1 = single-lane serving)"})
 
     def __post_init__(self):
         if int(self.max_batch) < 1:
             raise ValueError(f"max_batch must be >= 1, got "
                              f"{self.max_batch!r}")
+        if int(self.n_replicas) < 1:
+            raise ValueError(f"n_replicas must be >= 1, got "
+                             f"{self.n_replicas!r}")
 
 
 @dataclass(frozen=True)
@@ -448,6 +461,10 @@ def manifest_meta_for(spec: RetrieverSpec) -> Dict[str, Any]:
         if spec.shard.sharded:
             meta["kind"] = "sharded_index"
             meta["shard_max_vectors"] = int(spec.shard.shard_max_vectors)
+            # auto (0) is the long-standing default: written only when
+            # pinned, so pre-existing artifacts hash/compare unchanged
+            if int(spec.shard.probe_threads) > 0:
+                meta["probe_threads"] = int(spec.shard.probe_threads)
     return meta
 
 
@@ -474,8 +491,9 @@ def retriever_spec_from_manifest(manifest: Dict[str, Any],
             manifest.get("backend", "plaid"),
             dict(manifest.get("params", {})))
         if kind == "sharded_index":
-            shard = ShardSpec(shard_max_vectors=int(
-                manifest.get("shard_max_vectors", 0)))
+            shard = ShardSpec(
+                shard_max_vectors=int(manifest.get("shard_max_vectors", 0)),
+                probe_threads=int(manifest.get("probe_threads", 0)))
     else:
         raise ValueError(f"manifest kind {kind!r} carries no retriever "
                          f"spec")

@@ -20,6 +20,11 @@ ColBERTv2/PLAID-class systems actually deploy:
   * The two pipeline stages overlap: the batcher thread encodes batch
     N+1 while the search thread reranks batch N (encode is host+device
     bound, rerank device bound — the classic two-stage pipeline).
+  * Scale-out: with ``n_replicas > 1`` the engine wraps the served
+    index in replica groups (core/replicated.py) and runs one search
+    lane per group — each staged microbatch routes whole to a lane
+    (``search_batch_on``), so groups placed on different device rows
+    rerank concurrently while results stay bitwise identical to lane 0.
   * The index is held behind a refcounted, double-buffered
     ``IndexHandle``. A watcher thread polls the artifact directory's
     monotonic ``generation`` (core/persist.py); a new generation is
@@ -271,9 +276,11 @@ class EngineStats:
         self.queue_wait_s: deque = deque(maxlen=self.WINDOW)
         self.swaps = 0
         self.generations_seen: deque = deque(maxlen=self.WINDOW)
+        self.replica_batches: dict = {}     # lane id -> batches served
 
     def record_batch(self, n_real: int, bucket: int, reason: str,
-                     waits: List[float], generation: int) -> None:
+                     waits: List[float], generation: int,
+                     replica: int = 0) -> None:
         with self._lock:
             self.batches += 1
             self.flush_reasons[reason] += 1
@@ -282,6 +289,8 @@ class EngineStats:
             self.queue_wait_s.extend(waits)
             self.served += n_real
             self.generations_seen.append(generation)
+            self.replica_batches[replica] = (
+                self.replica_batches.get(replica, 0) + 1)
 
     def record_failed(self, n: int) -> None:
         with self._lock:
@@ -310,6 +319,7 @@ class EngineStats:
                                       if waits.size else 0.0),
                 "swaps": self.swaps,
                 "generations_seen": list(self.generations_seen),
+                "replica_batches": dict(self.replica_batches),
             }
 
 
@@ -339,7 +349,8 @@ class ServingEngine:
                  poll_interval_s: float = 0.2,
                  warmup_on_start: bool = True,
                  pipeline_depth: Optional[int] = None,
-                 index_generation: Optional[int] = None):
+                 index_generation: Optional[int] = None,
+                 n_replicas: int = 1):
         self.searcher = searcher
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) * 1e-3
@@ -348,6 +359,8 @@ class ServingEngine:
         self.index_dir = index_dir
         self.poll_interval_s = float(poll_interval_s)
         self.warmup_on_start = warmup_on_start
+        self.n_replicas = int(n_replicas)
+        assert self.n_replicas >= 1, n_replicas
 
         # Gen-0 index. A caller who already loaded/built the artifact
         # passes ``index_generation`` (read when it materialized the
@@ -373,6 +386,7 @@ class ServingEngine:
                     owned = True
                 except IndexFormatError:    # mid-publish: watcher retries
                     gen = 0
+        index, owned = self._place(index, owned)
         self._handle = IndexHandle(index, generation=gen,
                                    on_retire=self._on_handle_retired,
                                    owned=owned)
@@ -393,6 +407,10 @@ class ServingEngine:
         if pipeline_depth is None:
             pipeline_depth = 2 if (os.cpu_count() or 1) >= 4 else 1
         self._staged_cap = max(int(pipeline_depth), 1)
+        if self.n_replicas > 1:
+            # the staged queue feeds every replica lane: it must hold at
+            # least one batch per lane or lanes starve behind admission
+            self._staged_cap = max(self._staged_cap, self.n_replicas)
         self._inline = self._staged_cap == 1
         self._stop = False
         self._abandon = False
@@ -412,7 +430,25 @@ class ServingEngine:
                    max_wait_ms=spec.max_wait_ms, k=spec.k,
                    poll_interval_s=spec.poll_interval_s,
                    warmup_on_start=spec.warmup_on_start,
-                   pipeline_depth=spec.pipeline_depth, **kw)
+                   pipeline_depth=spec.pipeline_depth,
+                   n_replicas=getattr(spec, "n_replicas", 1), **kw)
+
+    # ----------------------------------------------------------- placement
+    def _place(self, index, owned: bool):
+        """Wrap the served index in replica groups (core/replicated.py)
+        when the engine routes across ``n_replicas`` lanes. Returns
+        (index, owned): single-lane engines serve the index untouched;
+        multi-lane engines serve a ``ReplicatedIndex`` whose wrapper the
+        engine always owns (retiring it drops compiled plans; the inner
+        index is only closed when the ORIGINAL was engine-loaded)."""
+        if self.n_replicas == 1:
+            return index, owned
+        from repro.core.replicated import ReplicatedIndex
+        if isinstance(index, ReplicatedIndex):
+            return index, owned
+        placed = ReplicatedIndex.replicate(index, self.n_replicas,
+                                           own_inner=owned)
+        return placed, True
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -434,9 +470,14 @@ class ServingEngine:
                              name="engine-batcher", daemon=True),
         ]
         if not self._inline:
-            self._threads.append(
-                threading.Thread(target=self._search_loop,
-                                 name="engine-search", daemon=True))
+            # one search lane per replica: lane r serves its batches on
+            # replica group r (search_batch_on), so groups placed on
+            # different device rows rerank concurrently
+            for r in range(self.n_replicas):
+                self._threads.append(
+                    threading.Thread(target=self._search_loop, args=(r,),
+                                     name=f"engine-search-{r}",
+                                     daemon=True))
         if self.index_dir is not None:
             self._threads.append(
                 threading.Thread(target=self._watch_loop,
@@ -532,6 +573,7 @@ class ServingEngine:
         with self._handle_lock:
             old = self._handle
             gen = old.generation + 1 if generation is None else generation
+            new_index, owned = self._place(new_index, owned)
             self._handle = IndexHandle(new_index, generation=gen,
                                        on_retire=self._on_handle_retired,
                                        owned=owned)
@@ -558,8 +600,12 @@ class ServingEngine:
                 if gen <= self._handle.generation:
                     continue
                 new_index = load_artifact(self.index_dir, mmap=True)
+                # place BEFORE prewarm so every replica lane is warm the
+                # moment the swap lands (swap_index's _place is then a
+                # no-op on the already-wrapped index)
+                new_index, owned = self._place(new_index, True)
                 self._prewarm_index(new_index)
-                self.swap_index(new_index, generation=gen, owned=True)
+                self.swap_index(new_index, generation=gen, owned=owned)
             except Exception:               # noqa: BLE001 — keep serving
                 logger.exception("hot-swap attempt failed; serving "
                                  "continues on generation %d",
@@ -574,9 +620,17 @@ class ServingEngine:
             return
         L = cfg.query_maxlen - 2
         enc1 = self.searcher.encode_queries(np.ones((1, L), np.int32))
+        # multi-lane engines warm EVERY replica lane (a lane that first
+        # traces mid-stream would break the no-retrace contract); the
+        # single-lane path keeps the long-standing per-bucket search
+        warm = (getattr(index, "warm_shapes", None)
+                if self.n_replicas > 1 else None)
         for b in self.buckets:
-            index.search_batch(np.broadcast_to(enc1, (b,) + enc1.shape[1:]),
-                               k=self.default_k)
+            qb = np.broadcast_to(enc1, (b,) + enc1.shape[1:])
+            if warm is not None:
+                warm(qb, k=self.default_k)
+            else:
+                index.search_batch(qb, k=self.default_k)
 
     # ------------------------------------------------------------- batcher
     def _pop_coalesced(self):
@@ -695,17 +749,23 @@ class ServingEngine:
                 self._staged_cond.notify_all()
 
     # -------------------------------------------------------------- search
-    def _serve_staged(self, staged) -> None:
+    def _serve_staged(self, staged, replica: int = 0) -> None:
         """Run stage 2 for one encoded microbatch and resolve its
-        futures (called from the search thread, or inline from the
-        batcher at pipeline depth 1)."""
+        futures (called from a search lane thread, or inline from the
+        batcher at pipeline depth 1). ``replica`` picks the lane a
+        routed index serves this batch on — every lane is bitwise
+        identical, so routing is purely a throughput decision."""
         enc, n, kk, batch, reason, waits = staged
         try:
             with self._handle_lock:
                 handle = self._handle
                 index = handle.acquire()
             try:
-                S, I = index.search_batch(enc, k=kk)
+                search_on = getattr(index, "search_batch_on", None)
+                if search_on is not None:
+                    S, I = search_on(replica, enc, k=kk)
+                else:
+                    S, I = index.search_batch(enc, k=kk)
             except BaseException as e:      # noqa: BLE001
                 for sl in batch:
                     sl.future._fail(e)
@@ -719,11 +779,11 @@ class ServingEngine:
                 sl.future._fill(sl.lo, S[lo:lo + sl.n], I[lo:lo + sl.n])
                 lo += sl.n
             self.stats.record_batch(n, len(enc), reason, waits,
-                                    handle.generation)
+                                    handle.generation, replica=replica)
         finally:
             self._batch_done()
 
-    def _search_loop(self) -> None:
+    def _search_loop(self, replica: int = 0) -> None:
         while True:
             with self._staged_cond:
                 if not self._staged_cond.wait_for(
@@ -735,7 +795,7 @@ class ServingEngine:
                     continue
                 staged = self._staged.popleft()
                 self._staged_cond.notify_all()
-            self._serve_staged(staged)
+            self._serve_staged(staged, replica=replica)
 
 
 # ---------------------------------------------------------------------------

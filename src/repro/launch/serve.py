@@ -152,7 +152,8 @@ def main(argv=None):
     ap.add_argument("--arrival-qps", default=None,
                     help="comma-separated offered loads; selects OPEN-LOOP "
                          "mode (Poisson arrivals through the ServingEngine)")
-    add_spec_args(ap, ServeSpec, only=("max_batch", "max_wait_ms", "k"))
+    add_spec_args(ap, ServeSpec,
+                  only=("max_batch", "max_wait_ms", "k", "n_replicas"))
     ap.add_argument("--index-dir", default=None,
                     help="artifact directory: load the index from it if "
                          "a manifest exists (skip corpus encode + build), "
@@ -171,8 +172,9 @@ def main(argv=None):
                  f"{args.arrival_qps!r}")
 
     cfg = get_smoke_config("colbertv2")
-    serve_spec = spec_from_args(ServeSpec, args,
-                                only=("max_batch", "max_wait_ms", "k"))
+    serve_spec = spec_from_args(
+        ServeSpec, args,
+        only=("max_batch", "max_wait_ms", "k", "n_replicas"))
     try:
         spec = RetrieverSpec(
             pooling=spec_from_args(PoolingSpec, args, prefix="pool_"),

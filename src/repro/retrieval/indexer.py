@@ -175,7 +175,8 @@ class Indexer:
     # ------------------------------------------------------------- streaming
     def build_streaming(self, token_batches: Iterable[np.ndarray],
                         shard_max_vectors: int,
-                        out_dir: Optional[str] = None):
+                        out_dir: Optional[str] = None,
+                        probe_threads: int = 0):
         """Bounded-memory build: token-batch stream -> capped shards.
 
         Args:
@@ -187,6 +188,9 @@ class Indexer:
             are atomic; the flush check runs after each batch) — the
             realized bound is reported as
             ``IndexStats.peak_buffered_vectors``.
+          probe_threads: stage-1 probe pool width for the built index
+            (``ShardSpec.probe_threads``; 0 = auto). A pinned value is
+            recorded in the root manifest and restored on load.
           out_dir: when given, every flushed shard is saved to
             ``out_dir/shard_XXXXX`` and REOPENED mmap'd — the buffer's
             bytes move to disk at flush, and the root manifest +
@@ -207,6 +211,7 @@ class Indexer:
                              for lo in range(0, len(arr), B))
         sharded = ShardedIndex(dim=self.cfg.proj_dim, backend=self.backend,
                                shard_max_vectors=shard_max_vectors,
+                               probe_threads=probe_threads,
                                **self._index_kw())
 
         buffer: List[np.ndarray] = []

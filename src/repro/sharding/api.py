@@ -157,6 +157,24 @@ def recsys_rules(batch_axes: Axis = "data", model_axis: str = "model") -> Dict[s
     }
 
 
+def serve_rules(shard_axis: str = "shard",
+                replica_axis: str = "replica") -> Dict[str, Axis]:
+    """Scale-out serving (launch/mesh.make_serve_mesh): the doc axis
+    partitions over the shard axis inside a replica group; queries are
+    replicated (every shard scores the whole microbatch, the top-k
+    merge is the only collective). The batch axis maps to the replica
+    axis only for router-level accounting — the engine routes whole
+    microbatches to replica groups rather than splitting rows."""
+    return {
+        "docs": shard_axis,
+        "queries": None,
+        "tokens": None,
+        "dim": None,
+        "centroids": None,
+        "batch": replica_axis,
+    }
+
+
 def retrieval_rules(batch_axes: Axis = "data", model_axis: str = "model") -> Dict[str, Axis]:
     axes = ((batch_axes,) if isinstance(batch_axes, str)
             else tuple(batch_axes)) + (model_axis,)

@@ -1,0 +1,317 @@
+"""ReplicatedIndex (core/replicated.py) + the engine's replica router:
+every lane is bitwise-identical to the wrapped index, the forced
+shard_map flat path matches the dispatch path, warmed lanes re-trace
+nothing, and hot-swapping sharded generations through a multi-lane
+engine leaks no probe-pool threads.
+
+Parity regime follows tests/test_sharded.py: exhaustive candidate
+budgets, unit vectors, np.array_equal on scores AND ids.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.index import MultiVectorIndex
+from repro.core.replicated import ReplicatedIndex
+from repro.core.sharded import ShardedIndex
+from repro.launch.engine import CompileCounter, ServingEngine
+
+BACKENDS = ["flat", "hnsw", "plaid"]
+KW = dict(doc_maxlen=24, n_centroids=16, ndocs=4096, hnsw_candidates=8192)
+DIM = 16
+
+
+def unit_docs(rng, n=40, dim=DIM, lo=4, hi=20):
+    docs = []
+    for _ in range(n):
+        v = rng.normal(size=(rng.integers(lo, hi), dim)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    return docs
+
+
+def unit_queries(rng, n=6, lq=5, dim=DIM):
+    q = rng.normal(size=(n, lq, dim)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def build_inner(backend, docs, sharded=True, cap=160):
+    if sharded:
+        ix = ShardedIndex(dim=DIM, backend=backend,
+                          shard_max_vectors=cap, **KW)
+    else:
+        ix = MultiVectorIndex(dim=DIM, backend=backend, **KW)
+    ix.add(docs)
+    return ix
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("sharded", [False, True])
+def test_every_lane_matches_wrapped_index(backend, sharded):
+    rng = np.random.default_rng(0)
+    inner = build_inner(backend, unit_docs(rng), sharded=sharded)
+    qs = unit_queries(rng)
+    S0, I0 = inner.search_batch(qs, k=7)
+    for n_replicas in (1, 3):
+        rep = ReplicatedIndex.replicate(inner, n_replicas)
+        for r in range(n_replicas):
+            S, I = rep.search_batch_on(r, qs, k=7)
+            assert np.array_equal(S, S0)
+            assert np.array_equal(I, I0)
+        # the parity surface routes through lane 0
+        S, I = rep.search_batch(qs, k=7)
+        assert np.array_equal(S, S0) and np.array_equal(I, I0)
+
+
+def test_forced_shard_map_matches_dispatch():
+    """The SPMD flat path (one shard_map program per replica group) must
+    be bitwise-identical to the per-shard dispatch merge — including on
+    a single device, where the mesh degenerates to one cell."""
+    rng = np.random.default_rng(1)
+    sh = build_inner("flat", unit_docs(rng, n=50), cap=120)
+    assert sh.n_shards >= 2
+    qs = unit_queries(rng)
+    S0, I0 = sh.search_batch(qs, k=9)
+    rep = ReplicatedIndex.replicate(sh, 2, use_shard_map=True)
+    for r in range(2):
+        S, I = rep.search_batch_on(r, qs, k=9)
+        assert np.array_equal(S, S0)
+        assert np.array_equal(I, I0)
+    # monolithic flat: a one-part plan is still a valid program
+    mono = build_inner("flat", unit_docs(rng, n=50), sharded=False)
+    S0, I0 = mono.search_batch(qs, k=9)
+    rep1 = ReplicatedIndex.replicate(mono, 1, use_shard_map=True)
+    S, I = rep1.search_batch(qs, k=9)
+    assert np.array_equal(S, S0) and np.array_equal(I, I0)
+
+
+def test_delete_fans_to_all_copies_and_invalidates_plans():
+    rng = np.random.default_rng(2)
+    docs = unit_docs(rng)
+    qs = unit_queries(rng)
+    copies = [build_inner("flat", docs) for _ in range(2)]
+    rep = ReplicatedIndex(copies, use_shard_map=True)
+    rep.search_batch(qs, k=5)                   # builds lane-0 plan
+    rep.delete([0, 7])
+    ref = build_inner("flat", docs)
+    ref.delete([0, 7])
+    S0, I0 = ref.search_batch(qs, k=5)
+    for r in range(2):
+        S, I = rep.search_batch_on(r, qs, k=5)
+        assert np.array_equal(S, S0) and np.array_equal(I, I0)
+    rep.delete([])                              # well-typed no-op
+    S, I = rep.search_batch(qs, k=5)
+    assert np.array_equal(S, S0) and np.array_equal(I, I0)
+
+
+def test_add_is_shared_only():
+    rng = np.random.default_rng(3)
+    docs = unit_docs(rng, n=12)
+    sh = build_inner("flat", docs)
+    rep = ReplicatedIndex.replicate(sh, 2)
+    ids = rep.add([docs[0]])                    # shared inner: fine
+    assert ids[0] == rep.n_docs - 1
+    distinct = ReplicatedIndex([build_inner("flat", docs),
+                                build_inner("flat", docs)])
+    with pytest.raises(RuntimeError, match="rebuild"):
+        distinct.add([docs[0]])
+
+
+# ------------------------------------------------------------------ loading
+def test_from_dir_distinct_copies_and_probe_split(tmp_path):
+    from repro.core.persist import save_sharded
+    rng = np.random.default_rng(4)
+    sh = build_inner("flat", unit_docs(rng), cap=120)
+    save_sharded(sh, str(tmp_path))
+    qs = unit_queries(rng)
+    S0, I0 = sh.search_batch(qs, k=7)
+    rep = ReplicatedIndex.from_dir(str(tmp_path), n_replicas=2)
+    assert rep.own_inner
+    assert rep._inners[0] is not rep._inners[1]
+    # auto probe width divides across lanes (a pinned width would not)
+    auto = ShardedIndex(dim=DIM, backend="flat").probe_threads
+    for ix in rep._inners:
+        assert ix.probe_threads == max(1, auto // 2)
+    for r in range(2):
+        S, I = rep.search_batch_on(r, qs, k=7)
+        assert np.array_equal(S, S0) and np.array_equal(I, I0)
+    rep.close()
+    assert all(ix.closed for ix in rep._inners)
+
+
+def test_from_dir_pinned_probe_threads_survive(tmp_path):
+    from repro.core.persist import load_sharded, save_sharded
+    rng = np.random.default_rng(5)
+    sh = ShardedIndex(dim=DIM, backend="flat", shard_max_vectors=120,
+                      probe_threads=3, **KW)
+    sh.add(unit_docs(rng))
+    save_sharded(sh, str(tmp_path))
+    assert load_sharded(str(tmp_path)).probe_threads == 3
+    rep = ReplicatedIndex.from_dir(str(tmp_path), n_replicas=2)
+    for ix in rep._inners:                      # pin honored, not divided
+        assert ix.probe_threads == 3
+    rep.close()
+
+
+# -------------------------------------------------------------- no-retrace
+def test_warmed_lanes_do_not_retrace():
+    rng = np.random.default_rng(6)
+    sh = build_inner("flat", unit_docs(rng), cap=120)
+    qs = unit_queries(rng, n=4)
+    rep = ReplicatedIndex.replicate(sh, 2, use_shard_map=True)
+    with CompileCounter() as cold:
+        rep.warm_shapes(qs, k=7)
+    assert cold.count > 0, "probe is not observing compilations"
+    with CompileCounter() as c:
+        for r in (0, 1, 0, 1):
+            rep.search_batch_on(r, qs, k=7)
+    assert c.count == 0, f"{c.count} re-traces on warmed lanes"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_warmed_dispatch_lanes_do_not_retrace(backend):
+    rng = np.random.default_rng(7)
+    sh = build_inner(backend, unit_docs(rng), cap=160)
+    qs = unit_queries(rng, n=4)
+    rep = ReplicatedIndex.replicate(sh, 2)
+    rep.warm_shapes(qs, k=7)
+    rep.search_batch_on(1, qs, k=7)             # flush any stragglers
+    with CompileCounter() as c:
+        for r in (0, 1, 1, 0):
+            rep.search_batch_on(r, qs, k=7)
+    assert c.count == 0, f"{c.count} re-traces on warmed {backend} lanes"
+
+
+# ------------------------------------------------------------------- engine
+class VecSearcher:
+    def __init__(self, index):
+        self.index = index
+
+    def encode_queries(self, q):
+        return np.asarray(q, np.float32)
+
+    def warmup(self, batch_sizes, k=10):
+        if isinstance(batch_sizes, (int, np.integer)):
+            batch_sizes = [batch_sizes]
+        for bs in sorted(set(batch_sizes)):
+            self.index.search_batch(np.zeros((bs, 5, DIM), np.float32),
+                                    k=k)
+
+
+def test_engine_replica_router_parity_and_stats():
+    rng = np.random.default_rng(8)
+    sh = build_inner("flat", unit_docs(rng), cap=120)
+    qs = unit_queries(rng, n=48)
+    S0, I0 = sh.search_batch(qs, k=10)
+    with ServingEngine(VecSearcher(sh), max_batch=8, max_wait_ms=1.0,
+                       n_replicas=3) as eng:
+        futs = [eng.submit(qs[i][None]) for i in range(len(qs))]
+        for i, f in enumerate(futs):
+            S, I = f.result(timeout=30)
+            assert np.array_equal(S[0], S0[i])
+            assert np.array_equal(I[0], I0[i])
+        snap = eng.stats.snapshot()
+    assert sum(snap["replica_batches"].values()) == snap["batches"]
+    assert set(snap["replica_batches"]) <= {0, 1, 2}
+
+
+def test_engine_single_replica_unchanged():
+    """n_replicas=1 must serve the index UNWRAPPED — zero perturbation
+    of the long-standing single-lane pipeline."""
+    rng = np.random.default_rng(9)
+    sh = build_inner("flat", unit_docs(rng))
+    eng = ServingEngine(VecSearcher(sh), max_batch=4, max_wait_ms=1.0)
+    assert eng._handle.index is sh
+    eng2 = ServingEngine(VecSearcher(sh), max_batch=4, max_wait_ms=1.0,
+                         n_replicas=2)
+    assert isinstance(eng2._handle.index, ReplicatedIndex)
+    assert eng2._handle.index.inner is sh
+    assert not eng2._handle.index.own_inner     # caller's index: not closed
+
+
+def test_engine_swap_under_replicas():
+    rng = np.random.default_rng(10)
+    docs = unit_docs(rng)
+    sh = build_inner("flat", docs)
+    qs = unit_queries(rng, n=4)
+    with ServingEngine(VecSearcher(sh), max_batch=4, max_wait_ms=1.0,
+                       n_replicas=2) as eng:
+        sh2 = build_inner("flat", docs, cap=120)
+        old = eng.swap_index(sh2)
+        assert old.wait_drained(timeout=5.0)
+        assert isinstance(eng._handle.index, ReplicatedIndex)
+        S0, I0 = sh2.search_batch(qs, k=10)
+        S, I = eng.search(qs)
+        assert np.array_equal(S, S0) and np.array_equal(I, I0)
+
+
+# ------------------------------------------------- probe-pool thread leak
+def _live_threads():
+    return sum(1 for t in threading.enumerate() if t.is_alive())
+
+
+def test_sharded_close_releases_probe_pool():
+    rng = np.random.default_rng(11)
+    sh = build_inner("flat", unit_docs(rng), cap=80)
+    qs = unit_queries(rng, n=2)
+    sh.search_batch(qs, k=5)                    # spin up pool workers
+    assert not sh.closed
+    sh.close()
+    assert sh.closed
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        if not any(t.name.startswith("shard-probe") and t.is_alive()
+                   for t in threading.enumerate()):
+            break
+        time.sleep(0.05)
+    else:
+        pytest.fail("probe pool threads survived close()")
+    # a closed index still answers (degraded sequential probing)
+    S, I = sh.search_batch(qs, k=5)
+    assert S.shape == (2, 5)
+
+
+def test_hot_swap_generations_do_not_leak_threads():
+    """Satellite regression: N owned sharded generations swapped through
+    the engine must not strand N probe pools — each retiring handle
+    closes its index, so live threads stay bounded."""
+    rng = np.random.default_rng(12)
+    docs = unit_docs(rng)
+    sh0 = build_inner("flat", docs, cap=80)
+    qs = unit_queries(rng, n=2)
+    with ServingEngine(VecSearcher(sh0), max_batch=4, max_wait_ms=1.0,
+                       n_replicas=2) as eng:
+        eng.search(qs)
+        swapped = []
+        for i in range(6):
+            gen = build_inner("flat", docs, cap=80)
+            gen.search_batch(qs, k=5)           # spin up its pool
+            old = eng.swap_index(gen, owned=True)
+            assert old.wait_drained(timeout=5.0)
+            eng.search(qs)
+            swapped.append(gen)
+        # every retired generation's pool must be shut down
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            if all(g.closed for g in swapped[:-1]):
+                break
+            time.sleep(0.05)
+        assert all(g.closed for g in swapped[:-1]), \
+            "retired sharded generations left open across hot swaps"
+        assert not swapped[-1].closed           # the live one serves on
+    # stop() retires the final owned generation too; once every closed
+    # pool's workers exit, only sh0's (caller-owned, never closed) may
+    # remain — a linear-in-swaps thread count is the leak this pins
+    assert swapped[-1].closed
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        probe_threads = sum(1 for t in threading.enumerate()
+                            if t.is_alive()
+                            and t.name.startswith("shard-probe"))
+        if probe_threads <= sh0.probe_threads:
+            break
+        time.sleep(0.05)
+    assert probe_threads <= sh0.probe_threads, \
+        f"{probe_threads} probe threads live after {len(swapped)} swaps"

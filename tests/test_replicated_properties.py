@@ -1,0 +1,106 @@
+"""Property tests: replica-router parity across (backend x n_replicas x
+n_shards x k).
+
+Every replica lane — including the degenerate "all queries routed to
+one lane" pattern — must return bitwise the wrapped index's results;
+dead-even score ties (duplicate docs straddling shard boundaries) must
+keep the monolithic tie order through the per-lane merge.
+
+Gated on ``hypothesis`` (PR 1 convention: skip, don't fail, in
+containers without it; CI installs it).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.index import MultiVectorIndex
+from repro.core.replicated import ReplicatedIndex
+from repro.core.sharded import ShardedIndex
+
+DIM = 16
+KW = dict(doc_maxlen=24, n_centroids=8, ndocs=4096, hnsw_candidates=8192)
+
+
+def corpus(seed, n_docs):
+    rng = np.random.default_rng(seed)
+    docs = []
+    for _ in range(n_docs):
+        v = rng.normal(size=(rng.integers(3, 9), DIM)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    qs = rng.normal(size=(4, 5, DIM)).astype(np.float32)
+    return docs, qs / np.linalg.norm(qs, axis=-1, keepdims=True)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_docs=st.integers(6, 24),
+       n_shards=st.integers(1, 4), n_replicas=st.integers(1, 3),
+       backend=st.sampled_from(["flat", "hnsw", "plaid"]),
+       k=st.sampled_from([1, 3, 10, 40]))
+def test_every_lane_equals_wrapped_index(seed, n_docs, n_shards,
+                                         n_replicas, backend, k):
+    docs, qs = corpus(seed, n_docs)
+    vecs = sum(len(d) for d in docs)
+    cap = max(1, -(-vecs // n_shards))          # ceil: ~n_shards shards
+    inner = ShardedIndex(dim=DIM, backend=backend, shard_max_vectors=cap,
+                         **KW)
+    inner.add(docs)
+    S0, I0 = inner.search_batch(qs, k=k)
+    force = backend == "flat" and (seed % 2 == 0)
+    rep = ReplicatedIndex.replicate(inner, n_replicas,
+                                    use_shard_map=True if force else None)
+    for r in range(n_replicas):
+        S, I = rep.search_batch_on(r, qs, k=k)
+        assert np.array_equal(S, S0), (backend, r, k)
+        assert np.array_equal(I, I0), (backend, r, k)
+    # all-queries-one-replica: hammering a single non-zero lane (the
+    # router's worst skew) changes nothing, run to run
+    r = seed % n_replicas
+    for _ in range(2):
+        S, I = rep.search_batch_on(r, qs, k=k)
+        assert np.array_equal(S, S0) and np.array_equal(I, I0)
+    # out-of-range lane ids wrap (router modulo contract)
+    S, I = rep.search_batch_on(n_replicas, qs, k=k)
+    assert np.array_equal(S, S0) and np.array_equal(I, I0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_dups=st.integers(2, 6),
+       n_replicas=st.integers(1, 3),
+       backend=st.sampled_from(["flat", "hnsw", "plaid"]))
+def test_dead_even_ties_keep_monolithic_order(seed, n_dups, n_replicas,
+                                              backend):
+    """Duplicate one doc across shard boundaries: its copies score
+    EXACTLY equal, so any merge that reorders ties (or resolves them per
+    lane differently) is caught here against the monolithic order."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(4, DIM)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=-1, keepdims=True)
+    docs = []
+    for i in range(12):
+        if i % (12 // n_dups) == 0 and sum(
+                1 for d in docs if d is base) < n_dups:
+            docs.append(base)
+        v = rng.normal(size=(rng.integers(3, 7), DIM)).astype(np.float32)
+        docs.append(v / np.linalg.norm(v, axis=-1, keepdims=True))
+    vecs = sum(len(d) for d in docs)
+    cap = max(1, vecs // 3)                     # boundaries split the dups
+    inner = ShardedIndex(dim=DIM, backend=backend, shard_max_vectors=cap,
+                         **KW)
+    inner.add(docs)
+    qs = base[None, :3, :] + 0.0                # query = a duplicated doc
+    k = min(len(docs), 10)
+    S0, I0 = inner.search_batch(qs, k=k)
+    rep = ReplicatedIndex.replicate(inner, n_replicas)
+    for r in range(n_replicas):
+        S, I = rep.search_batch_on(r, qs, k=k)
+        assert np.array_equal(S, S0)
+        assert np.array_equal(I, I0)
+    if backend == "flat":
+        forced = ReplicatedIndex.replicate(inner, n_replicas,
+                                           use_shard_map=True)
+        for r in range(n_replicas):
+            S, I = forced.search_batch_on(r, qs, k=k)
+            assert np.array_equal(S, S0)
+            assert np.array_equal(I, I0)

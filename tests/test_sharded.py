@@ -132,6 +132,33 @@ def test_single_doc_and_empty_index(backend):
     assert (I[:, 1:] == -1).all()
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_input_edges_are_typed_noops(backend):
+    """delete([]) / add([]) / shard_of([]) are well-typed no-ops — on
+    empty AND populated sharded indexes (CRUD driven from batch
+    pipelines routinely hands over empty slices)."""
+    rng = np.random.default_rng(13)
+    qs = unit_queries(rng, n=2)
+    for ix in (ShardedIndex(dim=DIM, backend=backend, **KW),):
+        owner = ix.shard_of(np.array([]))
+        assert owner.shape == (0,) and owner.dtype == np.int64
+        assert len(ix.add([])) == 0
+        ix.delete([])                           # no raise on empty index
+        ix.delete(np.array([], np.int64))
+    ix = ShardedIndex(dim=DIM, backend=backend, shard_max_vectors=80, **KW)
+    ix.add(unit_docs(rng, n=10))
+    S0, I0 = ix.search_batch(qs, k=4)
+    ids = ix.add([])
+    assert ids.shape == (0,) and ids.dtype == np.int64
+    ix.delete([])
+    owner = ix.shard_of(np.array([], np.float64))   # dtype-agnostic
+    assert owner.shape == (0,) and owner.dtype == np.int64
+    assert ix.n_docs == 10
+    S, I = ix.search_batch(qs, k=4)
+    np.testing.assert_array_equal(I0, I)
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S))
+
+
 # ------------------------------------------------------------ id routing
 def test_add_spills_and_ids_are_global():
     rng = np.random.default_rng(5)
