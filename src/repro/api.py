@@ -109,9 +109,8 @@ def _build_cascade(params, cfg, docs, spec: RetrieverSpec,
                          fine_factor=ix.fine_factor,
                          candidates=ix.candidates,
                          doc_maxlen=ix.doc_maxlen)
-    index.add(coarse_ix.encode_and_pool(docs),
-              pool(ix.fine_factor).encode_and_pool(docs))
-    raw = coarse_ix._raw_vector_count(docs)
+    coarse_docs, raw = coarse_ix.encode_and_pool_counted(docs)
+    index.add(coarse_docs, pool(ix.fine_factor).encode_and_pool(docs))
     if out_dir is not None:
         manifest = index.save(out_dir, extra_meta=_spec_extra_meta(spec))
         index_bytes = persist.artifact_bytes(manifest)

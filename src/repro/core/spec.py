@@ -214,6 +214,17 @@ class PoolingSpec(_SpecBase):
         "help": "token pooling method", "choices": pooling_methods})
     factor: int = field(default=1, metadata={
         "help": "pooling factor (1 = unpooled baseline)"})
+    # Ward implementation toggle (kernels/ward_pool): "auto" resolves to
+    # the Pallas kernel — it is bitwise-equal to core/ward.py everywhere
+    # and faster even under the CPU interpreter — "ref" pins the
+    # original loop (A/B parity gates, debugging). Only meaningful for
+    # method="ward"; carried but inert otherwise. RUNTIME-ONLY: never
+    # persisted into manifests — both impls produce identical artifacts
+    # (the bench gates it), so pinning an impl into an artifact would
+    # only freeze a load-time execution choice that isn't content.
+    ward_kernel: str = field(default="auto", metadata={
+        "help": "ward clustering path: Pallas kernel vs core/ward.py "
+                "reference", "choices": ("auto", "kernel", "ref")})
 
     def __post_init__(self):
         if not isinstance(self.method, str) or not self.method:
@@ -222,18 +233,31 @@ class PoolingSpec(_SpecBase):
         if int(self.factor) < 1:
             raise ValueError(f"pool factor must be >= 1, "
                              f"got {self.factor!r}")
+        if self.ward_kernel not in ("auto", "kernel", "ref"):
+            raise ValueError(f"ward_kernel must be auto|kernel|ref, "
+                             f"got {self.ward_kernel!r}")
 
     def apply(self, x, mask):
         """Pool one encode batch: (x [B,N,d], mask [B,N]) ->
         (pooled, pooled_mask), through the strategy registry."""
         if int(self.factor) <= 1:
             return pooling_strategy("none")(x, mask, 1)
+        if self.method == "ward" and "ward" not in _POOLING_REGISTRY:
+            # builtin ward carries the kernel/ref toggle; a registered
+            # "ward" strategy still shadows the builtin entirely
+            from repro.core.pooling import pool_doc_embeddings
+            return pool_doc_embeddings(x, mask, int(self.factor), "ward",
+                                       ward_kernel=self.ward_kernel)
         return pooling_strategy(self.method)(x, mask, int(self.factor))
 
     def manifest_meta(self) -> Dict[str, Any]:
         """The ``pool`` entry artifact manifests record — the ONE
         definition every save path embeds (its inverse is
         :func:`retriever_spec_from_manifest`)."""
+        # ward_kernel is deliberately ABSENT: both impls write bitwise-
+        # identical artifacts, so the toggle is a runtime choice (like
+        # ServeSpec), not index content — artifacts stay byte-stable
+        # across impl pins and pre-kernel history.
         return {"method": self.method, "factor": int(self.factor)}
 
 

@@ -22,6 +22,16 @@ are L2-normalized before clustering (tests pin this equivalence to SciPy).
 
 Ward is *reducible*, so the greedy merge order reproduces the NN-chain
 dendrogram; cutting at K clusters equals scipy fcluster(criterion="maxclust").
+
+PRODUCTION PATH: this module is now the REFERENCE implementation — its
+full-matrix argmin per merge step is O(N^3) per document. Builds run
+through ``repro.kernels.ward_pool`` (``ward_assign``), a Pallas kernel
+that keeps the distance matrix in VMEM and replaces the global argmin
+with lazy cached row minima (amortized O(N) selection per step),
+bitwise-equal to ``ward_cluster_batch`` and ~5-7x faster per batch even
+under the CPU interpreter. ``PoolingSpec.ward_kernel="ref"`` pins this
+loop for A/B parity gates; tests/test_kernels_ward.py sweeps the
+bitwise pin.
 """
 from __future__ import annotations
 

@@ -1,0 +1,9 @@
+"""Pallas Ward-pooling kernel (indexing fast path).
+
+``ward_assign`` is the public entry: same contract as
+``repro.core.ward.ward_cluster_batch`` (which stays as the bitwise
+reference, see ``ref.py``) with an ``impl`` toggle that
+``PoolingSpec.ward_kernel`` threads through the build pipeline.
+"""
+from repro.kernels.ward_pool.ops import ward_assign  # noqa: F401
+from repro.kernels.ward_pool.ref import ward_assign_ref  # noqa: F401

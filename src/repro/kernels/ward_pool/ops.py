@@ -1,0 +1,63 @@
+"""jit'd public wrapper for the Ward-pooling kernel: normalizes inputs
+the same way the reference does, pads the doc batch to a block
+multiple with fully-masked docs, dispatches to the Pallas kernel
+(interpret=True off-TPU), and unpads.
+
+``impl`` resolution (what ``PoolingSpec.ward_kernel`` carries):
+  * ``"auto"``   — the kernel path (it is bitwise-equal to the
+    reference everywhere and faster even under the CPU interpreter, so
+    auto means ON; ``"ref"`` exists for A/B parity gates and debugging).
+  * ``"kernel"`` — force the Pallas path.
+  * ``"ref"``    — force ``core/ward.py``'s ``ward_cluster_batch``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxsim.ops import _on_tpu, _pad_to
+from repro.kernels.ward_pool.kernel import ward_pool_pallas
+from repro.kernels.ward_pool.ref import ward_assign_ref
+
+WARD_IMPLS = ("auto", "kernel", "ref")
+
+
+def resolve_impl(impl: str) -> str:
+    """'auto'|'kernel'|'ref' -> 'kernel'|'ref'."""
+    if impl not in WARD_IMPLS:
+        raise ValueError(f"ward impl must be one of {WARD_IMPLS}, "
+                         f"got {impl!r}")
+    return "kernel" if impl == "auto" else impl
+
+
+@functools.partial(jax.jit, static_argnames=("factor", "block_b"))
+def _ward_assign_kernel(x, mask, factor: int, block_b: int = 8):
+    B, N, d = x.shape
+    x = x.astype(jnp.float32)
+    # same per-token normalization as ward_cluster's _init_state
+    nrm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    x = x / jnp.maximum(nrm, 1e-9)
+    x = jnp.where(mask[..., None], x, 0.0)
+    xp = _pad_to(x, 0, block_b)
+    mp = _pad_to(mask, 0, block_b)        # padded docs are all-masked
+    n_valid = jnp.sum(mp.astype(jnp.int32), axis=-1)
+    k = jnp.maximum(n_valid // factor + 1, 1)
+    steps = jnp.maximum(n_valid - k, 0)
+    out = ward_pool_pallas(xp, mp, k, steps, block_b=block_b,
+                           interpret=not _on_tpu())
+    return out[:B]
+
+
+def ward_assign(x, mask, factor: int, *, impl: str = "auto",
+                block_b: int = 8):
+    """Batched Ward cluster assignments, reference-bitwise.
+
+    x [B, N, d], mask [B, N] -> assign [B, N] int32 where each valid
+    token's id is its cluster's representative (lowest) token index —
+    the exact contract of ``ward_cluster_batch``.
+    """
+    if resolve_impl(impl) == "ref":
+        return ward_assign_ref(x, mask, factor)
+    return _ward_assign_kernel(x, mask, int(factor), block_b)

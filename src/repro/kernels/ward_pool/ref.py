@@ -1,0 +1,17 @@
+"""Reference path for the Ward-pooling kernel.
+
+The oracle is the existing ``core/ward.py`` implementation — the
+per-doc full-matrix argmin loop that tests/test_pooling.py pins against
+SciPy's ``linkage(method="ward")``. The Pallas kernel in this package
+must match it BITWISE (same merge order under ties, same handling of
+masked / degenerate docs); tests/test_kernels_ward.py sweeps the pin.
+"""
+from __future__ import annotations
+
+from repro.core.ward import ward_cluster_batch
+
+
+def ward_assign_ref(x, mask, factor: int):
+    """[B, N, d] x [B, N] -> [B, N] int32 cluster ids (representative
+    token index), exactly ``ward_cluster_batch``."""
+    return ward_cluster_batch(x, mask, factor)

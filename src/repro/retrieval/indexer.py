@@ -16,6 +16,14 @@ corpora bigger than RAM). Flushed shards are immediately saved and
 re-opened mmap'd, so the finished ``ShardedIndex`` holds file mappings,
 not buffers.
 
+Flushing is PIPELINED by default: a single background thread runs the
+host-side shard construction + save + mmap-reopen while the device
+encodes the next batches, double-buffered through a depth-1 queue so
+encode is never idle behind shard I/O (``IndexStats.flush_wait_s`` is
+the realized stall; ``pipeline=False`` pins the serial path, which the
+bench's parity gate builds against — shard order, doc ids and artifact
+bytes are identical either way).
+
 Data-parallel posture: document batches are independent, so under pjit the
 encode+pool step shards on the ``data`` axis; the index build consumes the
 gathered host-side lists (index construction is host-bound bookkeeping).
@@ -25,18 +33,29 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import queue
+import threading
+import time
 import warnings
+from collections import deque
 from dataclasses import dataclass
-from typing import Iterable, List, Optional
+from typing import Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.configs.base import ColbertConfig
 from repro.core.index import BACKENDS, MultiVectorIndex
-from repro.core.pooling import compact_pooled
+from repro.core.pooling import (compact_pooled, compact_pooled_begin,
+                                compact_pooled_finish)
 from repro.core.spec import IndexSpec, PoolingSpec
 from repro.models.colbert import encode_docs
+
+# tiny jit'd reduction: the eager astype+sum pair costs ~2ms of op-by-op
+# dispatch per batch on CPU, which serializes the encode stream
+_emit_count = jax.jit(lambda emit: jnp.sum(emit.astype(jnp.int32)))
 
 
 @dataclass
@@ -52,6 +71,11 @@ class IndexStats:
     n_shards: int = 1
     peak_buffered_vectors: int = 0   # host-buffer high-water mark
     max_batch_vectors: int = 0       # largest single encode-batch yield
+    # pipelined-flush trace (streaming only; zeros for monolithic /
+    # serial builds keep older stats.json consumers stable)
+    pipelined: bool = False
+    flush_wait_s: float = 0.0        # encode-side stall behind shard I/O
+    flush_busy_s: float = 0.0        # wall spent inside flush (any thread)
 
     @property
     def vector_reduction(self) -> float:
@@ -121,11 +145,38 @@ class Indexer:
 
     def encode_and_pool(self, doc_tokens: np.ndarray) -> List[np.ndarray]:
         """doc_tokens [N, L] -> list of per-doc pooled vector arrays."""
+        return self.encode_and_pool_counted(doc_tokens)[0]
+
+    def encode_and_pool_counted(
+            self, doc_tokens: np.ndarray
+    ) -> Tuple[List[np.ndarray], int]:
+        """(pooled per-doc arrays, raw emitted-vector count) from ONE
+        encode pass — the emit mask each batch already computes is the
+        unpooled count, so no second ``prepare_doc_tokens`` sweep over
+        the corpus (the old ``_raw_vector_count``) is needed.
+
+        Runs a 1-deep software pipeline: batch i+1's encode+pool+compact
+        is DISPATCHED before batch i's compacted rows are pulled to the
+        host, so the host-side fetch/split overlaps the next batch's
+        device compute (dispatch is async; only the fetch blocks). Raw
+        counts stay device-resident scalars until the end for the same
+        reason. Output order and bits are unaffected — batches are
+        fetched strictly in order.
+        """
         out: List[np.ndarray] = []
+        raw_parts = []      # device scalars; materialized once at the end
         N = doc_tokens.shape[0]
         if N == 0:
-            return out
+            return out, 0
         B = self.encode_batch
+        pending = None      # (compaction ticket | docs list, n real docs)
+
+        def fetch(prev):
+            ticket, keep = prev
+            docs = (ticket if isinstance(ticket, list)
+                    else compact_pooled_finish(ticket))
+            out.extend(docs[:keep] if keep < len(docs) else docs)
+
         for lo in range(0, N, B):
             chunk = doc_tokens[lo:lo + B]
             pad = B - chunk.shape[0]
@@ -133,9 +184,20 @@ class Indexer:
                 chunk = np.pad(chunk, ((0, pad), (0, 0)))
             v, emit = encode_docs(self.params, jnp.asarray(chunk), self.cfg)
             pooled, pmask = self.pooling.apply(v, emit)
-            docs = compact_pooled(pooled, pmask)
-            out.extend(docs[:B - pad] if pad else docs)
-        return out
+            if pad:
+                # padding rows still emit their CLS/[D] markers — drop
+                # them from the raw count (and their docs below)
+                emit = emit[:B - pad]
+            raw_parts.append(_emit_count(emit))
+            if isinstance(pooled, jnp.ndarray):
+                ticket = compact_pooled_begin(pooled, pmask)
+            else:           # host-resident strategy output: no pipeline
+                ticket = compact_pooled(pooled, pmask)
+            if pending is not None:
+                fetch(pending)
+            pending = (ticket, B - pad)
+        fetch(pending)
+        return out, int(np.sum([np.asarray(r) for r in raw_parts]))
 
     def build(self, doc_tokens: np.ndarray,
               out_dir: Optional[str] = None):
@@ -149,8 +211,7 @@ class Indexer:
         the in-memory high-water mark.
         """
         from repro.core.persist import artifact_bytes, serialized_nbytes
-        doc_vecs = self.encode_and_pool(doc_tokens)
-        raw = self._raw_vector_count(doc_tokens)
+        doc_vecs, raw = self.encode_and_pool_counted(doc_tokens)
         index = MultiVectorIndex(dim=self.cfg.proj_dim,
                                  backend=self.backend, **self._index_kw())
         index.add(doc_vecs)
@@ -176,7 +237,8 @@ class Indexer:
     def build_streaming(self, token_batches: Iterable[np.ndarray],
                         shard_max_vectors: int,
                         out_dir: Optional[str] = None,
-                        probe_threads: int = 0):
+                        probe_threads: int = 0,
+                        pipeline: bool = True):
         """Bounded-memory build: token-batch stream -> capped shards.
 
         Args:
@@ -196,6 +258,15 @@ class Indexer:
             bytes move to disk at flush, and the root manifest +
             aggregated ``stats.json`` are published at the end. Without
             it the shards stay host-resident (still capped per shard).
+          pipeline: overlap shard construction/save/mmap-reopen with
+            the device encode of the next batches on ONE background
+            thread, double-buffered through a depth-1 handoff queue
+            (at most one shard group queued + one in flight, so the
+            transient host footprint adds <= 2 shard groups on top of
+            the buffer bound). Groups are flushed strictly FIFO, so
+            shard order, doc ids and artifact bytes are identical to
+            ``pipeline=False`` — the bench gates that parity.
+            ``peak_buffered_vectors`` accounting is unchanged.
 
         Returns (ShardedIndex, IndexStats) — stats aggregated across
         shards, ids global and contiguous in stream order.
@@ -214,13 +285,17 @@ class Indexer:
                                probe_threads=probe_threads,
                                **self._index_kw())
 
-        buffer: List[np.ndarray] = []
+        buffer: "deque[np.ndarray]" = deque()
         buffered = 0
         raw = 0
         peak = 0
         max_batch = 0
+        flush_wait_s = 0.0
+        flush_busy_s = 0.0
 
         def flush(docs_group: List[np.ndarray]) -> None:
+            nonlocal flush_busy_s
+            t0 = time.perf_counter()
             shard = sharded._new_shard()
             shard.add(docs_group)
             if out_dir is not None:
@@ -229,32 +304,77 @@ class Indexer:
                                    _shard_dirname(sharded.n_shards - 1))
                 shard.save(sub)
                 sharded.shards[-1] = MultiVectorIndex.load(sub, mmap=True)
+            flush_busy_s += time.perf_counter() - t0
 
-        for batch in token_batches:
-            batch = np.asarray(batch)
-            if batch.size == 0:
-                continue
-            docs = self.encode_and_pool(batch)
-            raw += self._raw_vector_count(batch)
-            got = sum(len(d) for d in docs)
-            max_batch = max(max_batch, got)
-            buffer.extend(docs)
-            buffered += got
-            peak = max(peak, buffered)
-            while buffered >= shard_max_vectors:
-                # split off one shard's worth; docs are atomic, so the
-                # first doc always goes in and the shard never splits one
-                take, used = 0, 0
-                while take < len(buffer):
-                    nxt = used + len(buffer[take])
-                    if take and nxt > shard_max_vectors:
-                        break
-                    used, take = nxt, take + 1
-                flush(buffer[:take])
-                buffer = buffer[take:]
-                buffered -= used
-        if buffer:
-            flush(buffer)
+        # -- single background flush lane (only this thread ever touches
+        # sharded during the build, so shard numbering stays serial) --
+        handoff: "queue.Queue" = queue.Queue(maxsize=1)
+        failures: List[BaseException] = []
+
+        def flush_worker() -> None:
+            while True:
+                group = handoff.get()
+                if group is None:
+                    return
+                try:
+                    if not failures:
+                        flush(group)
+                except BaseException as exc:  # surfaced by submit/join
+                    failures.append(exc)
+
+        worker = None
+        if pipeline:
+            worker = threading.Thread(target=flush_worker,
+                                      name="indexer-flush", daemon=True)
+            worker.start()
+
+        def submit(docs_group: List[np.ndarray]) -> None:
+            nonlocal flush_wait_s
+            if failures:
+                raise failures[0]
+            if worker is None:
+                flush(docs_group)
+                return
+            t0 = time.perf_counter()
+            handoff.put(docs_group)   # blocks only when a flush backlog
+            flush_wait_s += time.perf_counter() - t0
+
+        try:
+            for batch in token_batches:
+                batch = np.asarray(batch)
+                if batch.size == 0:
+                    continue
+                docs, raw_b = self.encode_and_pool_counted(batch)
+                raw += raw_b
+                got = sum(len(d) for d in docs)
+                max_batch = max(max_batch, got)
+                buffer.extend(docs)
+                buffered += got
+                peak = max(peak, buffered)
+                while buffered >= shard_max_vectors:
+                    # pop one shard's worth off the head; docs are
+                    # atomic, so the first doc always goes in and the
+                    # shard never splits one (O(docs-taken) per flush —
+                    # no tail copy of the remaining buffer)
+                    group: List[np.ndarray] = []
+                    used = 0
+                    while buffer:
+                        nxt = used + len(buffer[0])
+                        if group and nxt > shard_max_vectors:
+                            break
+                        group.append(buffer.popleft())
+                        used = nxt
+                    submit(group)
+                    buffered -= used
+            if buffer:
+                submit(list(buffer))
+                buffer.clear()
+        finally:
+            if worker is not None:
+                handoff.put(None)
+                worker.join()
+        if failures:
+            raise failures[0]
 
         if out_dir is not None:
             manifest = finalize_sharded(sharded, out_dir, extra_meta={
@@ -272,17 +392,11 @@ class Indexer:
             n_shards=sharded.n_shards,
             peak_buffered_vectors=peak,
             max_batch_vectors=max_batch,
+            pipelined=bool(pipeline),
+            flush_wait_s=flush_wait_s,
+            flush_busy_s=flush_busy_s,
         )
         if out_dir is not None:
             with open(os.path.join(out_dir, "stats.json"), "w") as fh:
                 json.dump(stats.to_json(), fh, indent=2)
         return sharded, stats
-
-    def _raw_vector_count(self, doc_tokens: np.ndarray) -> int:
-        """Unpooled emitted-vector count (for Table 3 reductions)."""
-        from repro.models.colbert import (emit_mask_docs,
-                                          prepare_doc_tokens)
-        toks, attn = prepare_doc_tokens(jnp.asarray(doc_tokens),
-                                        self.cfg.doc_maxlen)
-        emit = emit_mask_docs(toks, attn, self.cfg.mask_punctuation)
-        return int(np.asarray(emit).sum())

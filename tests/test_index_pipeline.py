@@ -1,0 +1,143 @@
+"""Streaming-build pipeline: pipelined flush parity, single-pass raw
+counts, compact device->host transfer accounting, failure propagation.
+
+Artifact filenames embed a random generation token (hot-swap needs
+unique names), so "identical artifacts" is checked on CONTENT: payload
+files compared under token-canonicalized names, manifests compared
+after stripping the token from embedded filenames.
+"""
+import json
+import os
+import re
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.pooling import compaction_transfer_stats
+from repro.core.spec import IndexSpec, PoolingSpec
+from repro.models.colbert import init_colbert
+from repro.retrieval.indexer import Indexer
+
+_TOKEN = re.compile(r"\.[0-9a-f]{8}\.npy")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("colbertv2")
+    params = init_colbert(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(3, cfg.trunk.vocab_size,
+                        size=(90, cfg.doc_maxlen - 2)).astype(np.int32)
+    return params, cfg, toks
+
+
+def _indexer(params, cfg, **pool_kw):
+    return Indexer(params, cfg, encode_batch=32,
+                   index_spec=IndexSpec.from_config(cfg, backend="flat",
+                                                    ndocs=4096),
+                   pooling_spec=PoolingSpec(**pool_kw))
+
+
+def _canonical_artifact(root):
+    """{canonical relpath: bytes-or-normalized-json} with the random
+    generation token stripped (stats.json excluded: it records build
+    timings, not index content)."""
+    out = {}
+    for dirpath, _, files in os.walk(root):
+        for name in sorted(files):
+            if name == "stats.json":
+                continue
+            path = os.path.join(dirpath, name)
+            rel = _TOKEN.sub(".npy", os.path.relpath(path, root))
+            with open(path, "rb") as fh:
+                blob = fh.read()
+            if name.endswith(".json"):
+                out[rel] = _TOKEN.sub(".npy", blob.decode())
+            else:
+                out[rel] = blob
+    return out
+
+
+def test_pipelined_flush_matches_serial(setup, tmp_path):
+    params, cfg, toks = setup
+    dirs, stats = {}, {}
+    for pipe in (False, True):
+        d = str(tmp_path / f"pipe_{pipe}")
+        sharded, st = _indexer(params, cfg, method="ward", factor=2) \
+            .build_streaming(toks, shard_max_vectors=512, out_dir=d,
+                             pipeline=pipe)
+        dirs[pipe], stats[pipe] = d, st
+        assert st.pipelined is pipe
+    a, b = stats[False], stats[True]
+    # identical build outcome: shard layout, ids, counts, buffer peaks
+    for f in ("n_docs", "n_vectors_raw", "n_vectors_stored", "n_shards",
+              "peak_buffered_vectors", "max_batch_vectors"):
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.n_shards >= 2
+    ca, cb = (_canonical_artifact(dirs[p]) for p in (False, True))
+    assert sorted(ca) == sorted(cb)
+    for rel in ca:
+        assert ca[rel] == cb[rel], f"artifact drift in {rel}"
+
+
+def test_pipelined_in_memory_build_parity(setup):
+    params, cfg, toks = setup
+    res = {}
+    for pipe in (False, True):
+        sharded, st = _indexer(params, cfg, method="ward", factor=2) \
+            .build_streaming(toks, shard_max_vectors=512, pipeline=pipe)
+        qs = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                          (4, 8, cfg.proj_dim)), np.float32)
+        res[pipe] = (st, sharded.search_batch(qs, k=5))
+    sa, sb = res[False][0], res[True][0]
+    assert sa.n_shards == sb.n_shards
+    for ra, rb in zip(res[False][1], res[True][1]):
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+
+
+def test_raw_count_single_pass_matches_reencode(setup):
+    params, cfg, toks = setup
+    ix = _indexer(params, cfg, method="ward", factor=2)
+    _, raw = ix.encode_and_pool_counted(toks)
+    # the old second corpus pass, inlined as the oracle
+    import jax.numpy as jnp
+    from repro.models.colbert import emit_mask_docs, prepare_doc_tokens
+    t, attn = prepare_doc_tokens(jnp.asarray(toks), cfg.doc_maxlen)
+    emit = emit_mask_docs(t, attn, cfg.mask_punctuation)
+    assert raw == int(np.asarray(emit).sum())
+    # and both build paths report it
+    _, st_mono = ix.build(toks)
+    _, st_stream = _indexer(params, cfg, method="ward", factor=2) \
+        .build_streaming(toks, shard_max_vectors=512)
+    assert st_mono.n_vectors_raw == raw
+    assert st_stream.n_vectors_raw == raw
+
+
+def test_compaction_transfer_bounded(setup):
+    params, cfg, toks = setup
+    factor = 2
+    compaction_transfer_stats(reset=True)
+    _indexer(params, cfg, method="ward", factor=factor).build(toks)
+    ts = compaction_transfer_stats(reset=True)
+    assert ts["batches"] > 0 and ts["padded_bytes"] > 0
+    ratio = ts["compact_bytes"] / ts["padded_bytes"]
+    # <= 1/factor + eps: each doc pools to n//f + 1 vectors, so the
+    # slack is ~1 slot per doc plus the counts vector
+    eps = 2.0 / cfg.doc_maxlen + 0.02
+    assert ratio <= 1.0 / factor + eps, ratio
+
+
+def test_flush_failure_propagates(setup, tmp_path, monkeypatch):
+    params, cfg, toks = setup
+    from repro.core.index import MultiVectorIndex
+
+    def boom(self, *a, **kw):
+        raise RuntimeError("disk on fire")
+
+    monkeypatch.setattr(MultiVectorIndex, "save", boom)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        _indexer(params, cfg, method="ward", factor=2).build_streaming(
+            toks, shard_max_vectors=512, out_dir=str(tmp_path / "boom"),
+            pipeline=True)

@@ -1,0 +1,170 @@
+"""Ward-pooling Pallas kernel: bitwise parity with the reference loop.
+
+The kernel runs in interpret mode on CPU (ops.py keys on the backend),
+so the sweep here exercises the exact program CI and the TPU path
+share. Three pins:
+
+  * kernel assign == ``ward_cluster_batch`` BITWISE (not canonical-
+    label equal — index artifacts must not depend on the impl),
+  * both == SciPy's ward dendrogram cut (the existing fixture),
+  * the pooled pipeline (``pool_doc_embeddings`` + ``compact_pooled``)
+    is bitwise-identical through either impl, including the device-side
+    compaction path.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:  # hypothesis gates only the sweep tests, not the fixed fixtures
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+from scipy.cluster.hierarchy import fcluster, linkage
+
+from repro.core.pooling import compact_pooled, pool_doc_embeddings
+from repro.core.ward import ward_cluster_batch
+from repro.kernels.ward_pool import ward_assign
+
+
+def canon(labels):
+    m, out = {}, []
+    for v in labels:
+        if v not in m:
+            m[v] = len(m)
+        out.append(m[v])
+    return tuple(out)
+
+
+def _assert_bitwise(x, mask, factor):
+    ref = np.asarray(ward_cluster_batch(jnp.asarray(x), jnp.asarray(mask),
+                                        factor))
+    ker = np.asarray(ward_assign(jnp.asarray(x), jnp.asarray(mask),
+                                 factor, impl="kernel"))
+    np.testing.assert_array_equal(ref, ker)
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: N x dim x factor x masked-gap patterns
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_kernel_matches_reference_bitwise(data):
+        B = data.draw(st.integers(1, 12), label="B")
+        N = data.draw(st.integers(2, 48), label="N")
+        d = data.draw(st.integers(1, 40), label="d")
+        factor = data.draw(st.integers(2, 6), label="factor")
+        seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(B, N, d)).astype(np.float32)
+        # masked-gap patterns: contiguous tails, interior holes, all-False
+        mask = rng.random((B, N)) > data.draw(
+            st.sampled_from([0.0, 0.25, 0.6, 1.0]), label="gap_p")
+        if data.draw(st.booleans(), label="tail_gap"):
+            mask[0, N // 2:] = False
+        _assert_bitwise(x, mask, factor)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+    def test_tie_heavy_duplicates_match_bitwise(seed, factor):
+        # duplicated rows force distance ties — merge ORDER must match
+        rng = np.random.default_rng(seed)
+        B, N, d = 3, 24, 8
+        base = rng.normal(size=(B, N // 2, d)).astype(np.float32)
+        x = np.concatenate([base, base], axis=1)
+        x = x[:, rng.permutation(N)]
+        mask = np.ones((B, N), bool)
+        _assert_bitwise(x, mask, factor)
+
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_kernel_matches_reference_bitwise():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the SciPy fixture, through the kernel path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("factor", [2, 3, 4, 6])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kernel_matches_scipy(factor, seed):
+    rng = np.random.default_rng(seed)
+    B, N, d = 4, 32, 16
+    x = rng.normal(size=(B, N, d)).astype(np.float32)
+    mask = np.ones((B, N), bool)
+    mask[1, 25:] = False
+    mask[3, 10:] = False
+    assign = np.asarray(ward_assign(jnp.asarray(x), jnp.asarray(mask),
+                                    factor, impl="kernel"))
+    for b in range(B):
+        xv = x[b][mask[b]]
+        xv /= np.linalg.norm(xv, axis=-1, keepdims=True)
+        k = xv.shape[0] // factor + 1
+        sc = fcluster(linkage(xv, method="ward"), t=k, criterion="maxclust")
+        assert canon(sc) == canon(assign[b][mask[b]]), (b, factor)
+
+
+# ---------------------------------------------------------------------------
+# edges: all-masked / single-token / n_valid <= factor / identicals
+# ---------------------------------------------------------------------------
+def test_edge_docs_match_bitwise():
+    rng = np.random.default_rng(0)
+    B, N, d = 4, 16, 8
+    x = rng.normal(size=(B, N, d)).astype(np.float32)
+    mask = np.ones((B, N), bool)
+    mask[0, :] = False          # all-masked doc
+    mask[1, 1:] = False         # single-token doc
+    mask[2, 3:] = False         # n_valid (3) <= factor (4)
+    for factor in (2, 4, 8):
+        _assert_bitwise(x, mask, factor)
+
+
+def test_identical_vectors_match_bitwise():
+    # all pairwise distances zero: pure tie-break territory
+    x = np.ones((2, 12, 4), np.float32)
+    mask = np.ones((2, 12), bool)
+    for factor in (2, 3):
+        ref = _assert_bitwise(x, mask, factor)
+        n_clusters = len(set(ref[0].tolist()))
+        assert n_clusters == 12 // factor + 1
+
+
+def test_impl_dispatch_and_validation():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 4)),
+                    jnp.float32)
+    mask = jnp.ones((2, 8), bool)
+    a_auto = np.asarray(ward_assign(x, mask, 2, impl="auto"))
+    a_ref = np.asarray(ward_assign(x, mask, 2, impl="ref"))
+    np.testing.assert_array_equal(a_auto, a_ref)
+    with pytest.raises(ValueError):
+        ward_assign(x, mask, 2, impl="fused")
+
+
+# ---------------------------------------------------------------------------
+# the full pooled pipeline through either impl, incl. device compaction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("factor", [2, 3])
+def test_pooled_pipeline_bitwise_identical(factor):
+    rng = np.random.default_rng(5)
+    B, N, d = 7, 40, 16          # B deliberately not a block_b multiple
+    x = jnp.asarray(rng.normal(size=(B, N, d)), jnp.float32)
+    mask = np.ones((B, N), bool)
+    mask[2, 30:] = False
+    mask[5, :] = False
+    mask = jnp.asarray(mask)
+    pk, mk = pool_doc_embeddings(x, mask, factor, "ward",
+                                 ward_kernel="kernel")
+    pr, mr = pool_doc_embeddings(x, mask, factor, "ward",
+                                 ward_kernel="ref")
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    # device-side compaction == host boolean gather, bitwise
+    dev = compact_pooled(pk, mk)
+    host = compact_pooled(np.asarray(pk), np.asarray(mk))
+    assert len(dev) == len(host) == B
+    for a, b in zip(dev, host):
+        np.testing.assert_array_equal(a, b)
