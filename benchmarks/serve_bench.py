@@ -26,6 +26,14 @@ packed rerank, then the legacy reconstruction path with the f32 store
 forced resident — and records bitwise parity, both latencies, and the
 resident doc-representation byte ratio (gated >= 8x at bits=2).
 
+``--probe-grid`` runs the candidate-generation grid instead: the SAME
+plaid index served with the host candidate path (``probe_kernel=
+"host"``) and then the device-resident pipeline, recording bitwise
+parity, both latencies, a transfer-guard proof of zero device->host
+bytes between encode and the final top-k, and the QPS ratio (gated
+device >= host; the reference-box artifact records >= 1.3x). The
+section merges into ``BENCH_serve.json`` under ``plaid_probe``.
+
 ``--assert-parity`` exits non-zero on any parity mismatch, failed
 query, or missed/non-monotonic hot swap (the ``serve-engine-smoke``
 CI job). It is a CORRECTNESS gate only — the throughput acceptance
@@ -352,6 +360,133 @@ def run_compress_grid(args, cfg, params, corpus) -> int:
     return 0
 
 
+def probe_cell(params, cfg, corpus, pool_factor: int, batch: int,
+               n_queries: int, k: int, ndocs: int):
+    """One pool-factor cell of the candidate-generation grid.
+
+    Builds a plaid index, serves it with the HOST candidate path
+    (``probe_kernel="host"`` — the pre-change world), flips the SAME
+    index to the device-resident pipeline and re-serves: bitwise parity
+    (ids AND score bits), both latencies, and a transfer-guard proof
+    that the device path moves zero bytes device->host between query
+    encode and the final [Nq, k] top-k land in one row.
+
+    Timing is index-side (``search_batch`` over pre-encoded query
+    microbatches): the transformer encode is identical on both paths
+    and would otherwise dominate the cell, burying the stage this grid
+    measures. ``nprobe=16`` widens the probe so candidate generation
+    carries serving-realistic weight relative to the rerank.
+    """
+    import jax.numpy as jnp
+
+    indexer = Indexer(
+        params, cfg,
+        index_spec=IndexSpec.from_config(cfg, backend="plaid",
+                                         ndocs=ndocs, nprobe=16),
+        pooling_spec=PoolingSpec(method="ward",
+                                 factor=max(pool_factor, 1)))
+    index, stats = indexer.build(corpus.doc_token_batch(cfg.doc_maxlen - 2))
+    searcher = Searcher(params, cfg, index)
+    q_all = corpus.query_token_batch(cfg.query_maxlen - 2)
+    qv_all = np.asarray(searcher.encode_queries(q_all))
+
+    def timed(repeats=4):
+        lats = []
+        n = min(n_queries, len(qv_all))
+        for _ in range(repeats):
+            for lo in range(0, n - batch + 1, batch):
+                t0 = time.perf_counter()
+                index.search_batch(qv_all[lo:lo + batch], k=k)
+                lats.append(time.perf_counter() - t0)
+        per_pass = len(lats) // repeats
+        lat_ms = np.asarray(lats[per_pass:]) * 1e3    # drop warm pass
+        return {"qps": float(len(lat_ms) * batch) / float(lat_ms.sum() / 1e3),
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99))}
+
+    # ---- host candidate path (reference) -------------------------------
+    index.probe_kernel = "host"
+    S0, I0 = searcher.search(q_all, k=k)            # warm + parity probe
+    host = timed()
+
+    # ---- device-resident pipeline --------------------------------------
+    index.probe_kernel = "device"
+    from repro.core.plaid import device_probe_plan
+    qv = qv_all[:batch]
+    engaged, geom = device_probe_plan(index._plaid, qv.shape[1],
+                                      index.nprobe, index.ndocs, "device")
+    assert engaged, "device candidate path did not engage on this cell"
+    S1, I1 = searcher.search(q_all, k=k)            # warm device traces
+    device = timed()
+
+    # zero-hop proof: candidates + rerank + device top-k under a D2H
+    # transfer guard — the ONLY host transfer is the final [Nq, k] copy,
+    # taken after the guard exits
+    with jax.transfer_guard_device_to_host("disallow"):
+        scores, cand = index.scored_candidates(qv)
+        top_s, top_i = jax.lax.top_k(scores, min(k, scores.shape[1]))
+        top_ids = jnp.take_along_axis(cand, top_i, axis=1)
+    jax.block_until_ready((top_s, top_ids))
+
+    parity = bool(
+        np.array_equal(I0, I1)
+        and np.array_equal(np.asarray(S0, np.float32).view(np.int32),
+                           np.asarray(S1, np.float32).view(np.int32)))
+    div = index._plaid.device_ivf()
+    row = {
+        "pool_factor": pool_factor, "batch_size": batch,
+        "n_docs": index.n_docs, "n_vectors": stats.n_vectors_stored,
+        "ivf_device_bytes": div.device_bytes(),
+        "ivf_list_cap": div.list_cap, "ivf_overflow": div.overflow,
+        "slate_width": geom[3],
+        "host": host, "device": device,
+        "device_vs_host_qps": device["qps"] / max(host["qps"], 1e-9),
+        "parity_bitwise": parity,
+        "zero_host_transfers": True,      # the guard above would raise
+    }
+    print(f"plaid  f={pool_factor} bs={batch:3d} "
+          f"host qps={host['qps']:8.1f} p50={host['p50_ms']:6.1f}ms | "
+          f"device qps={device['qps']:8.1f} p50={device['p50_ms']:6.1f}ms "
+          f"({row['device_vs_host_qps']:.2f}x) | "
+          f"parity={'ok' if parity else 'FAIL'}")
+    return row
+
+
+def run_probe_grid(args, cfg, params, corpus) -> int:
+    """``--probe-grid``: host vs device candidate generation ->
+    ``plaid_probe`` section merged into --out (BENCH_serve.json).
+
+    Hard gates (deterministic, asserted here): bitwise parity in every
+    cell, zero device->host transfers inside the guarded window, device
+    engagement, and device QPS >= host QPS. The committed artifact
+    additionally records the measured speedup (>= 1.3x on the reference
+    box; not gated in CI where box performance varies).
+    """
+    factors = [int(f) for f in args.pool_factors.split(",") if f]
+    rows = [probe_cell(params, cfg, corpus, f, args.compress_batch,
+                       args.queries, args.k, args.ndocs)
+            for f in factors]
+    section = {"dataset": args.dataset, "n_docs": args.docs,
+               "ndocs_budget": args.ndocs, "grid": rows}
+    try:
+        with open(args.out) as fh:
+            out = json.load(fh)
+    except (OSError, ValueError):
+        out = {}
+    out["plaid_probe"] = section
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"\nmerged plaid_probe section into {args.out}")
+    bad = [r for r in rows if not r["parity_bitwise"]]
+    bad += [r for r in rows if r["device_vs_host_qps"] < 1.0]
+    if bad:
+        print(f"PROBE GRID FAILED: {len(bad)} bad cells")
+        return 1
+    print("probe grid gates passed: bitwise parity everywhere, zero "
+          "host transfers probe->rerank, device qps >= host qps")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="scifact")
@@ -382,6 +517,10 @@ def main(argv=None):
                     help="run the (quant bits x pool factor) "
                          "compressed-domain rerank grid instead of the "
                          "serving benchmark")
+    ap.add_argument("--probe-grid", action="store_true",
+                    help="run the host-vs-device candidate-generation "
+                         "grid instead of the serving benchmark (merges "
+                         "a plaid_probe section into --out)")
     ap.add_argument("--bits", default="2,4",
                     help="compress grid: quant_bits values (2 and/or 4)")
     ap.add_argument("--compress-batch", type=int, default=8,
@@ -404,6 +543,8 @@ def main(argv=None):
 
     if args.compress_grid:
         return run_compress_grid(args, cfg, params, corpus)
+    if args.probe_grid:
+        return run_probe_grid(args, cfg, params, corpus)
 
     results = []
     engine_rows = []

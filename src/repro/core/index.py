@@ -36,8 +36,9 @@ from repro.core.hnsw import HNSW
 from repro.core.ivf import train_centroids
 from repro.core.maxsim import (maxsim_all_docs, maxsim_rerank_store,
                                topk_with_pads)
-from repro.core.plaid import (PLAIDIndex, build_plaid_index,
-                              maxsim_packed_rerank_store, plaid_candidates)
+from repro.core.plaid import (PLAIDIndex, PROBE_KERNELS, build_plaid_index,
+                              device_probe_plan, maxsim_packed_rerank_store,
+                              plaid_candidates)
 from repro.core.quantization import train_codec
 from repro.core.spec import INDEX_PARAM_KEYS
 
@@ -71,6 +72,11 @@ class MultiVectorIndex:
     # store. Both produce bitwise-identical scores — False exists for the
     # parity tests and for debugging against the decoded view.
     packed_rerank: bool = True
+    # Serving toggle (RUNTIME-ONLY, never persisted — same contract as
+    # ``packed_rerank``): plaid candidate generation on device
+    # ("auto"/"device", see ``plaid.device_probe_plan``) vs the host
+    # numpy reference ("host"). Both produce bitwise-identical slates.
+    probe_kernel: str = "auto"
 
     # state
     deleted: set = field(default_factory=set)
@@ -79,9 +85,11 @@ class MultiVectorIndex:
     _hnsw_vec2doc: Optional[np.ndarray] = None
     _plaid: Optional[PLAIDIndex] = None
     _preset_codec: Optional[object] = field(default=None, repr=False)
+    _live_dev_cache: Optional[jnp.ndarray] = field(default=None, repr=False)
 
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
+        assert self.probe_kernel in PROBE_KERNELS, self.probe_kernel
         if self.backend != "plaid":
             self._store = DocStore(self.dim, self.doc_maxlen)
 
@@ -135,6 +143,21 @@ class MultiVectorIndex:
             live[np.fromiter(self.deleted, np.int64)] = False
         return live
 
+    def _live_dev(self) -> jnp.ndarray:
+        """Device-cached live mask for the zero-hop candidate path —
+        shipped once per mutation epoch instead of once per query."""
+        if self._live_dev_cache is None:
+            self._live_dev_cache = jnp.asarray(self._live())
+        return self._live_dev_cache
+
+    def _probe_plan(self, Lq: int):
+        """The device candidate-path decision for this query length
+        (see ``plaid.device_probe_plan``)."""
+        if self.backend != "plaid" or self._plaid is None:
+            return False, None
+        return device_probe_plan(self._plaid, Lq, self.nprobe, self.ndocs,
+                                 self.probe_kernel)
+
     # ------------------------------------------------------------------ build
     def add(self, doc_vectors: List[np.ndarray]) -> np.ndarray:
         """doc_vectors: list of [n_i, dim] unit vectors. Returns doc ids."""
@@ -150,6 +173,7 @@ class MultiVectorIndex:
             self._add_plaid(doc_vectors)
         else:
             self._store.add(doc_vectors)
+        self._live_dev_cache = None
         return ids
 
     def _add_hnsw(self, doc_vectors, ids):
@@ -213,6 +237,7 @@ class MultiVectorIndex:
             self._hnsw.delete(tok)
         if self._store is not None:
             self._store.delete(np.asarray(doc_ids, np.int64))
+        self._live_dev_cache = None
         # plaid filters deleted ids at candidate time (compaction = rebuild)
 
     # ------------------------------------------------- two-stage batch engine
@@ -230,9 +255,12 @@ class MultiVectorIndex:
         if self.backend == "flat":
             return None, None
         if self.backend == "plaid":
+            use_dev, _ = self._probe_plan(np.asarray(qs).shape[1])
+            live = self._live_dev() if use_dev else self._live()
             return plaid_candidates(self._plaid, qs, nprobe=self.nprobe,
                                     t_cs=self.t_cs, ndocs=self.ndocs,
-                                    live=self._live(), q_mask=q_mask)
+                                    live=live, q_mask=q_mask,
+                                    probe_kernel=self.probe_kernel)
         return self._hnsw_candidates(qs, q_mask)
 
     def _hnsw_candidates(self, qs: np.ndarray, q_mask=None):
@@ -277,6 +305,9 @@ class MultiVectorIndex:
                 and self.packed_rerank):
             return maxsim_packed_rerank_store(self._plaid, qs, qm,
                                               cand, cand_mask)
+        if not isinstance(cand, np.ndarray):    # legacy store path is
+            cand = np.asarray(cand, np.int64)   # host-indexed
+            cand_mask = np.asarray(cand_mask)
         return maxsim_rerank_store(self.store, qs, qm, cand, cand_mask)
 
     def _rerank_dense(self, qs, cand, cand_mask, q_mask) -> jnp.ndarray:
@@ -336,6 +367,11 @@ class MultiVectorIndex:
         qs = np.asarray(qs, np.float32)
         block = 32                          # pad_candidate_sets block
         if self.backend == "plaid":
+            use_dev, geom = self._probe_plan(qs.shape[1])
+            if use_dev:
+                # device pipeline: ONE static slate width (s_out), and
+                # the plan proved the dense dispatch unreachable
+                return [geom[3]], False
             cap = min(self.n_docs, self.ndocs)
         else:
             Lq = max(qs.shape[1], 1)
@@ -376,7 +412,11 @@ class MultiVectorIndex:
             mask = np.ones((Nq, C), bool)
             scores = self.rerank(qs, cand, mask)
             topk_with_pads(scores, cand, k)
-        if self.backend == "plaid" and self._plaid is not None:
+        if (self.backend == "plaid" and self._plaid is not None
+                and not self._probe_plan(qs.shape[1])[0]):
+            # host path only: the device pipeline is ONE executable per
+            # (Nq, Lq) — lax.cond traces both prune branches — so the
+            # organic search above already compiled everything
             self._warm_plaid_prune(qs)
         if dense:
             # dense corpus-wide fallback is reachable (a candidate set

@@ -12,7 +12,8 @@ statistics all-reduce automatically. List construction is a host-side sort
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,11 +35,108 @@ class InvertedLists:
         return self.ids[self.offsets[c]:self.offsets[c + 1]]
 
     def lists_for(self, cs) -> np.ndarray:
-        """Concatenated ids for several centroids (deduplicated)."""
-        parts = [self.list_for(int(c)) for c in np.unique(np.asarray(cs))]
-        if not parts:
+        """Sorted unique ids for several centroids — one repeat/
+        ragged-arange gather over all requested lists (no per-centroid
+        Python loop), the same sweep ``plaid._gather_candidates`` runs
+        batch-wide."""
+        from repro.core.docstore import ragged_arange
+        cs = np.unique(np.asarray(cs, np.int64))
+        starts = self.offsets[cs]
+        lens = self.offsets[cs + 1] - starts
+        if int(lens.sum()) == 0:
             return np.zeros((0,), np.int64)
-        return np.unique(np.concatenate(parts))
+        pos = np.repeat(starts, lens) + ragged_arange(lens)
+        return np.unique(self.ids[pos])
+
+
+@dataclass
+class DeviceInvertedLists:
+    """Device-resident IVF for the zero-host-hop candidate path.
+
+    Two views, both shipped to device ONCE at build/load:
+
+      * the raw CSR (``offsets``/``ids`` — vector ids, centroid-major),
+        the bitwise source of truth, kept for segment-style consumers;
+      * a padded per-centroid UNIQUE-doc view (``doc_lists`` [K, Lmax]
+        int32, pad slots holding the SENTINEL ``n_docs`` so one
+        extended-live gather covers validity and liveness at once, plus
+        ``doc_valid`` [K, Lmax] for host-side introspection) that turns
+        stage 2's ragged list walk into one fixed-shape ``take`` — each
+        row holds that centroid's owner docs ascending, exactly what the
+        host path's (query, doc) dedupe would keep from that list;
+      * a dense 0/1 membership matrix (``doc_member`` [K, n_docs] f32,
+        derived from the SAME kept entries) that turns the batch-wide
+        set union into one matmul — probed-centroid one-hot rows times
+        this table count, exactly (small integers in f32), how many
+        probed lists own each doc. The matmul hits the MXU/BLAS instead
+        of the scatter/sort primitives accelerator backends serialize.
+
+    ``list_cap`` bounds Lmax; rows longer than the cap are truncated
+    and the dropped entry count lands in ``overflow``. ``overflow == 0``
+    is the exactness contract the device candidate path requires — a
+    capped build is a recall-trading footprint knob and callers must
+    check the accounting before trusting parity.
+    """
+    offsets: jnp.ndarray         # [K + 1] int32 CSR into ``ids``
+    ids: jnp.ndarray             # [n_vectors] int32 vector ids
+    doc_lists: jnp.ndarray       # [K, Lmax] int32 unique doc ids (padded)
+    doc_valid: jnp.ndarray       # [K, Lmax] bool
+    doc_member: jnp.ndarray      # [K, n_docs] f32 0/1 centroid->doc owner
+    list_cap: int                # Lmax actually used
+    overflow: int                # entries truncated by the cap (0 = exact)
+    n_docs: int = field(default=0)
+
+    @property
+    def n_centroids(self) -> int:
+        return self.doc_lists.shape[0]
+
+    def device_bytes(self) -> int:
+        return (self.offsets.nbytes + self.ids.nbytes
+                + self.doc_lists.nbytes + self.doc_valid.nbytes
+                + self.doc_member.nbytes)
+
+
+def build_device_inverted_lists(ivf: InvertedLists, vec2doc: np.ndarray,
+                                n_docs: int, list_cap: int = 0
+                                ) -> DeviceInvertedLists:
+    """Host-side build of the device IVF layout (shipped once).
+
+    ``list_cap=0`` sizes Lmax to the longest unique-doc list (exact;
+    ``overflow == 0``); a positive cap truncates longer lists, keeping
+    each list's lowest doc ids, and accounts the drops in ``overflow``.
+    """
+    from repro.core.docstore import ragged_arange
+    K = ivf.n_centroids
+    lens = np.diff(ivf.offsets)
+    cent = np.repeat(np.arange(K, dtype=np.int64), lens)
+    docs = np.asarray(vec2doc, np.int64)[ivf.ids]
+    # unique (centroid, doc) pairs, sorted => per-centroid ascending docs
+    cd = np.unique(cent * np.int64(max(n_docs, 1)) + docs)
+    ci, di = cd // max(n_docs, 1), cd % max(n_docs, 1)
+    counts = np.bincount(ci, minlength=K)
+    full = int(counts.max(initial=0))
+    cap = full if list_cap <= 0 else min(int(list_cap), full)
+    cap = max(cap, 1)
+    kept = np.minimum(counts, cap)
+    overflow = int((counts - kept).sum())
+    group_starts = np.zeros(K, np.int64)
+    np.cumsum(counts[:-1], out=group_starts[1:])
+    pos = np.repeat(group_starts, kept) + ragged_arange(kept)
+    doc_lists = np.full((K, cap), n_docs, np.int32)   # sentinel pads
+    doc_valid = np.zeros((K, cap), bool)
+    rows = np.repeat(np.arange(K), kept)
+    cols = ragged_arange(kept)
+    doc_lists[rows, cols] = di[pos]
+    doc_valid[rows, cols] = True
+    doc_member = np.zeros((K, max(n_docs, 1)), np.float32)
+    doc_member[rows, di[pos]] = 1.0        # same kept entries, densely
+    return DeviceInvertedLists(
+        offsets=jnp.asarray(ivf.offsets, jnp.int32),
+        ids=jnp.asarray(ivf.ids, jnp.int32),
+        doc_lists=jnp.asarray(doc_lists),
+        doc_valid=jnp.asarray(doc_valid),
+        doc_member=jnp.asarray(doc_member),
+        list_cap=cap, overflow=overflow, n_docs=int(n_docs))
 
 
 def train_centroids(vectors, n_centroids: int, n_iters: int = 12,

@@ -117,10 +117,16 @@ def topk_with_pads(scores, cand, k: int):
     import numpy as np
     kk = min(k, scores.shape[1])
     top_s, top_i = jax.lax.top_k(scores, kk)
-    top_s, top_i = np.asarray(top_s), np.asarray(top_i)
-    ids = (top_i.astype(np.int64) if cand is None
-           else np.take_along_axis(np.asarray(cand, np.int64), top_i,
-                                   axis=1))
+    if isinstance(cand, jax.Array):
+        # device candidates: gather the winning ids on device so the
+        # ONLY host transfer after encode is this [Nq, k] result
+        ids_dev = jnp.take_along_axis(cand, top_i, axis=1)
+        top_s, ids = np.asarray(top_s), np.asarray(ids_dev).astype(np.int64)
+    else:
+        top_s, top_i = np.asarray(top_s), np.asarray(top_i)
+        ids = (top_i.astype(np.int64) if cand is None
+               else np.take_along_axis(np.asarray(cand, np.int64), top_i,
+                                       axis=1))
     ids = np.where(np.isfinite(top_s), ids, -1)
     if kk < k:
         top_s = np.pad(top_s, ((0, 0), (0, k - kk)),
@@ -156,7 +162,8 @@ def topk_shard(scores, cand, k: int, base: int = 0):
     off = jnp.int32(base)
     if cand is None:
         return top_s, top_i.astype(jnp.int32) + off
-    c = jnp.asarray(np.asarray(cand, np.int32))
+    c = (cand.astype(jnp.int32) if isinstance(cand, jax.Array)
+         else jnp.asarray(np.asarray(cand, np.int32)))
     return top_s, jnp.take_along_axis(c, top_i, axis=1) + off
 
 

@@ -29,9 +29,17 @@ Query hyperparameters default to the best PLAID reproduction-study settings
 the paper uses (Appendix A): nprobe=8, t_cs=0.3, ndocs=8192.
 
 Device/host split: matmul-shaped stages (1, 3, 4) are jit'd jnp/Pallas;
-list bookkeeping (2) is vectorized host numpy. Fixed shapes throughout:
-candidate sets are padded to a block multiple so stage 3/4 trace once per
-(batch size, candidate budget) pair.
+list bookkeeping (2) has two interchangeable implementations — the
+vectorized host-numpy reference, and a fully DEVICE-RESIDENT pipeline
+(``probe_kernel`` toggle) that runs stages 1-3 as ONE fixed-shape jit
+program: padded per-centroid doc-list gather from ``DeviceInvertedLists``,
+sort-based (query, doc) dedupe, and the fused centroid-interaction probe
+(``kernels/plaid_probe``) behind a ``lax.cond`` prune — no ``np.asarray``
+host hop between query encode and the final top-k. The device path is
+engaged only when it is provably bitwise-equal to the host path (exact
+IVF view, dense corpus-wide regime statically unreachable). Fixed shapes
+throughout: candidate sets are padded to a block multiple so stage 3/4
+trace once per (batch size, candidate budget) pair.
 """
 from __future__ import annotations
 
@@ -45,11 +53,18 @@ import numpy as np
 
 from repro.core.docstore import (DocStore, pad_candidate_sets,
                                  ragged_arange)
-from repro.core.ivf import InvertedLists, build_inverted_lists
+from repro.core.ivf import (DeviceInvertedLists, InvertedLists,
+                            build_device_inverted_lists,
+                            build_inverted_lists)
 from repro.core.maxsim import _on_tpu, maxsim_rerank, topk_with_pads
 from repro.core.quantization import ResidualCodec, decode, encode
 
 _CAND_BLOCK = 32       # candidate-axis padding granularity (jit shape reuse)
+PROBE_KERNELS = ("auto", "device", "host")
+# auto mode falls back to the host gather above this membership-table
+# size (K * n_docs f32 elements) — the dense union matmul would
+# dominate device memory; "device" forces through it.
+_DEVICE_GATHER_CAP = 1 << 24
 
 
 @dataclass
@@ -63,6 +78,8 @@ class PLAIDIndex:
     doc_maxlen: int
     recon: Optional[DocStore] = None   # decoded-vector cache, lazy
     _packed_padded: Optional[Tuple] = field(default=None, repr=False)
+    _device_ivf: Optional[DeviceInvertedLists] = field(default=None,
+                                                       repr=False)
 
     @property
     def n_docs(self) -> int:
@@ -113,6 +130,9 @@ class PLAIDIndex:
                       + np.asarray(self.codec.values).nbytes),
             "recon": (self.recon.device_nbytes()
                       if self.recon is not None else 0),
+            # device IVF (candidate-generation tables), lazy like recon
+            "ivf": (self._device_ivf.device_bytes()
+                    if self._device_ivf is not None else 0),
         }
 
     def device_bytes(self) -> int:
@@ -176,8 +196,22 @@ class PLAIDIndex:
         ids, _, mask = self.padded_packed()
         return ids, mask
 
+    def device_ivf(self, list_cap: int = 0) -> DeviceInvertedLists:
+        """Cached device IVF layout (CSR + padded unique-doc lists),
+        shipped once per mutation epoch. The exact build (``list_cap=0``,
+        ``overflow == 0``) is what the device candidate path gathers
+        from; explicit caps bypass the cache (footprint experiments)."""
+        if list_cap:
+            return build_device_inverted_lists(self.ivf, self.vec2doc,
+                                               self.n_docs, list_cap)
+        if self._device_ivf is None:
+            self._device_ivf = build_device_inverted_lists(
+                self.ivf, self.vec2doc, self.n_docs)
+        return self._device_ivf
+
     def _invalidate(self):
         self._packed_padded = None
+        self._device_ivf = None
 
     # ------------------------------------------------------------------ CRUD
     def add(self, doc_vectors: list) -> np.ndarray:
@@ -267,15 +301,22 @@ def _centroid_scores_batch(qs, centroids):
 
 
 def _gather_candidates(index: PLAIDIndex, probe: np.ndarray,
-                       live: Optional[np.ndarray] = None
+                       live: Optional[np.ndarray] = None,
+                       probe_valid: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Stage 2: probe [Nq, Lq, nprobe] centroid ids -> padded candidate
-    doc ids [Nq, C] + validity mask [Nq, C]. Fully vectorized."""
+    doc ids [Nq, C] + validity mask [Nq, C]. Fully vectorized.
+    ``probe_valid`` (same shape as ``probe``) drops masked-token probes:
+    top_k over an all--inf row returns centroids 0..nprobe-1, and
+    walking those lists would silently inflate the candidate sets."""
     Nq = probe.shape[0]
     K = index.ivf.n_centroids
     flat = probe.reshape(Nq, -1).astype(np.int64)
+    keys = np.arange(Nq)[:, None] * K + flat
+    if probe_valid is not None:
+        keys = keys[probe_valid.reshape(Nq, -1)]
     # dedupe (query, centroid) pairs so each probed list is walked once
-    qc = np.unique(np.arange(Nq)[:, None] * K + flat)
+    qc = np.unique(keys)
     qi, ci = qc // K, qc % K
     starts = index.ivf.offsets[ci]
     lens = index.ivf.offsets[ci + 1] - starts
@@ -323,27 +364,204 @@ def _approx_scores_batch(cs, codes, code_mask, cand_mask, t_cs,
     return jnp.where(cand_mask, approx, -jnp.inf)
 
 
+def _ladder(n: int) -> int:
+    """The ``pad_candidate_sets`` geometric width for a max count of n."""
+    n = max(int(n), 1)
+    return _CAND_BLOCK << max(int(np.ceil(np.log2(-(-n // _CAND_BLOCK)))), 0)
+
+
+def _floor_ladder(n: int) -> int:
+    """Largest geometric width <= n (0 if n < the smallest width)."""
+    if n < _CAND_BLOCK:
+        return 0
+    C = _CAND_BLOCK
+    while C * 2 <= n:
+        C *= 2
+    return C
+
+
+def device_probe_plan(index: PLAIDIndex, Lq: int, nprobe: int,
+                      ndocs: int, probe_kernel: str = "auto"):
+    """Static decision + geometry for the device-resident candidate path.
+
+    Returns ``(use_device, (div, k, c_score, s_out))``. The device path
+    engages only when it is PROVABLY bitwise-equal to the host path:
+
+      * the device IVF view is exact (``overflow == 0``);
+      * the dense corpus-wide dispatch is statically unreachable — for
+        every possible per-query candidate count, the host path's final
+        padded width stays below ``n_docs`` (otherwise the host would
+        switch to the corpus-scan rerank, a different program whose
+        dispatch depends on runtime counts the device path cannot see
+        without a host sync);
+      * in "auto" mode, the padded gather stays under a memory cap.
+
+    ``c_score`` is the static stage-2/3 width (every possible candidate
+    fits), ``s_out`` the static output width (= the rerank slate width).
+    """
+    assert probe_kernel in PROBE_KERNELS, probe_kernel
+    if probe_kernel == "host" or index.n_vectors == 0 or index.n_docs == 0:
+        return False, None
+    div = index.device_ivf()
+    if div.overflow != 0:
+        return False, None
+    n_docs = index.n_docs
+    k = min(nprobe, index.codec.n_centroids)
+    W = max(Lq, 1) * k * div.list_cap       # padded gather slots / query
+    c_score = _pad_up(min(W, n_docs), _CAND_BLOCK)
+    s_out = min(c_score, _pad_up(int(ndocs), _CAND_BLOCK))
+    # worst-case host output width over all data: the widest no-prune
+    # gather (largest ladder value <= ndocs, capped by the gather bound)
+    # vs the pruned width (ndocs block-padded, reachable only when the
+    # gather ladder can exceed ndocs)
+    lmax = _ladder(min(W, n_docs))
+    f_prune = _pad_up(int(ndocs), _CAND_BLOCK) if lmax > ndocs else 0
+    f_noprune = min(lmax, _floor_ladder(int(ndocs)))
+    if max(f_prune, f_noprune) >= n_docs:
+        return False, None
+    if (probe_kernel != "device"
+            and div.doc_member.size > _DEVICE_GATHER_CAP):
+        return False, None
+    return True, (div, k, c_score, s_out)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "t_cs", "ndocs",
+                                             "c_score", "s_out", "impl"))
+def _device_candidates(cs, qs, qm, doc_member, live, codes,
+                       tok_mask, centroids, *, k: int, t_cs: float,
+                       ndocs: int, c_score: int, s_out: int, impl: str):
+    """Stages 1-3 as one device program — no host round-trip.
+
+    Bitwise contract (pinned by tests/test_plaid_probe.py): candidate
+    ids, validity, and slot order equal the host path's —
+
+      * probe: same ``lax.top_k`` over the same (masked) centroid
+        scores; masked-token probes dropped (the host bugfix twin);
+      * gather/dedupe: probed-centroid one-hot rows x the 0/1
+        ``doc_member`` table (one matmul; counts are small integers,
+        exact in f32) -> per-query doc membership -> cumsum compaction.
+        Ascending unique doc ids land in slots 0..count-1, exactly
+        ``np.unique`` + ``pad_candidate_sets`` (no device sort or big
+        scatter — the two primitives XLA serializes on every backend);
+      * prune: the host's data-dependent decision (padded gather width
+        > ndocs) is replicated on device from the counts and the same
+        geometric ladder, then taken as a ``lax.cond`` — both branches
+        emit the static width ``s_out``, so one executable serves the
+        whole stream (no-retrace contract).
+    """
+    Nq = cs.shape[0]
+    n_docs = live.shape[0]
+    csm = jnp.where(qm[:, :, None], cs, -jnp.inf)
+    _, probe = jax.lax.top_k(csm, k)                     # [Nq, Lq, k]
+    flat = probe.reshape(Nq, -1)                         # [Nq, Lq*k]
+    pvalid = jnp.broadcast_to(qm[:, :, None], probe.shape
+                              ).reshape(Nq, -1)
+    # (query, doc) set union as ONE matmul: a probed-centroid one-hot
+    # row per query times the 0/1 membership table counts, exactly
+    # (small integers in f32), how many probed lists own each doc
+    K = doc_member.shape[0]
+    probed = jnp.any(
+        (flat[:, :, None] == jax.lax.broadcasted_iota(jnp.int32,
+                                                      (1, 1, K), 2))
+        & pvalid[:, :, None], axis=1)                    # [Nq, K]
+    hits = jax.lax.dot_general(
+        probed.astype(jnp.float32), doc_member,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # [Nq, n_docs]
+    member = (hits > 0.0) & live[None, :]
+    counts = member.sum(axis=1).astype(jnp.int32)        # [Nq]
+    # compact member columns ascending via cumsum positions —
+    # bit-for-bit np.unique's ascending unique ids at slots 0..cnt-1
+    pos = jnp.cumsum(member, axis=1, dtype=jnp.int32) - 1
+    docid = jax.lax.broadcasted_iota(jnp.int32, (Nq, n_docs), 1)
+    tpos = jnp.where(member, pos, jnp.int32(c_score))    # cnt <= c_score
+    cand_c = jax.vmap(lambda t, d: jnp.zeros((c_score,), jnp.int32)
+                      .at[t].set(d, mode="drop"))(tpos, docid)
+    mask_c = (jax.lax.broadcasted_iota(jnp.int32, (Nq, c_score), 1)
+              < counts[:, None])   # pad slots read doc 0, as on host
+
+    # the host prune decision, replicated: padded gather width > ndocs
+    maxc = jnp.maximum(counts.max(), 1)
+    ladder = jnp.asarray([_CAND_BLOCK << m for m in range(26)], jnp.int32)
+    host_c = jnp.min(jnp.where(ladder >= maxc, ladder,
+                               jnp.int32(2**31 - 1)))
+    keep = min(ndocs, c_score)
+
+    def unpruned(cand_c, mask_c):
+        return cand_c[:, :s_out], mask_c[:, :s_out]
+
+    def pruned(cand_c, mask_c):
+        gcodes = jnp.take(codes, cand_c, axis=0)         # [Nq, C, L]
+        gmask = jnp.take(tok_mask, cand_c, axis=0) & mask_c[:, :, None]
+        if impl == "kernel":
+            from repro.kernels.plaid_probe.ops import plaid_probe_scores
+            approx = plaid_probe_scores(qs, qm, centroids, gcodes,
+                                        gmask, mask_c, t_cs=t_cs,
+                                        impl="kernel")
+        else:
+            approx = _approx_scores_batch(csm, gcodes, gmask, mask_c,
+                                          t_cs)
+        top_s, top_i = jax.lax.top_k(approx, keep)
+        cand_p = jnp.take_along_axis(cand_c, top_i, axis=1)
+        mask_p = jnp.isfinite(top_s)
+        if keep < s_out:
+            cand_p = jnp.pad(cand_p, ((0, 0), (0, s_out - keep)))
+            mask_p = jnp.pad(mask_p, ((0, 0), (0, s_out - keep)))
+        return cand_p, mask_p
+
+    return jax.lax.cond(host_c > ndocs, pruned, unpruned, cand_c, mask_c)
+
+
 def plaid_candidates(index: PLAIDIndex, qs: np.ndarray,
                      nprobe: int = 8, t_cs: float = 0.3,
                      ndocs: int = 8192,
                      live: Optional[np.ndarray] = None,
-                     q_mask: Optional[np.ndarray] = None
+                     q_mask: Optional[np.ndarray] = None,
+                     probe_kernel: str = "auto"
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Stages 1-3 for a query batch: qs [Nq, Lq, dim] -> survivor doc
-    ids [Nq, S] + validity mask [Nq, S] (S <= ndocs, block-padded).
-    Masked query tokens contribute nothing to probes or approx scores."""
+    ids [Nq, S] + validity mask [Nq, S] (S <= ndocs block-padded).
+    Masked query tokens contribute nothing to probes or approx scores.
+
+    ``probe_kernel`` picks the stage-2/3 implementation (RUNTIME-ONLY,
+    never persisted): "host" is the vectorized-numpy reference path
+    (host arrays out); "device"/"auto" run the device-resident pipeline
+    (device arrays out, zero host hops) whenever ``device_probe_plan``
+    proves it bitwise-safe, falling back to the host path otherwise.
+    """
+    qs = np.asarray(qs, np.float32)
     Nq = len(qs)
     if index.n_vectors == 0:
         return np.zeros((Nq, 1), np.int64), np.zeros((Nq, 1), bool)
+    use_device, geom = device_probe_plan(index, qs.shape[1], nprobe,
+                                         ndocs, probe_kernel)
     cs = _centroid_scores_batch(jnp.asarray(qs, jnp.float32),
                                 jnp.asarray(index.codec.centroids))
+    if use_device:
+        div, k, c_score, s_out = geom
+        qm = (jnp.ones((Nq, qs.shape[1]), bool) if q_mask is None
+              else jnp.asarray(np.asarray(q_mask, bool)))
+        live_dev = (jnp.ones(index.n_docs, bool) if live is None
+                    else (live if isinstance(live, jax.Array)
+                          else jnp.asarray(np.asarray(live, bool))))
+        codes, tok_mask = index.padded_codes()
+        return _device_candidates(
+            cs, jnp.asarray(qs), qm, div.doc_member,
+            live_dev, codes, tok_mask, jnp.asarray(index.codec.centroids),
+            k=k, t_cs=float(t_cs), ndocs=int(ndocs), c_score=c_score,
+            s_out=s_out, impl="kernel" if _on_tpu() else "ref")
     if q_mask is not None:
-        # masked tokens: -inf centroid scores -> pruned to 0 in stage 3,
-        # and their probe picks are degenerate duplicates (harmless)
+        # masked tokens: -inf centroid scores are pruned to 0 in stage 3,
+        # and their (degenerate) probe picks are dropped before the
+        # gather — top_k over an all--inf row would otherwise walk
+        # centroids 0..nprobe-1's lists into the candidate set
         cs = jnp.where(jnp.asarray(q_mask, bool)[:, :, None], cs, -jnp.inf)
     k = min(nprobe, index.codec.n_centroids)
     _, probe = jax.lax.top_k(cs, k)                    # [Nq, Lq, nprobe]
-    cand, cmask = _gather_candidates(index, np.asarray(probe), live)
+    probe_valid = (None if q_mask is None else np.broadcast_to(
+        np.asarray(q_mask, bool)[:, :, None], (Nq, qs.shape[1], k)))
+    cand, cmask = _gather_candidates(index, np.asarray(probe), live,
+                                     probe_valid)
     if cand.shape[1] <= ndocs:
         return cand, cmask
     codes, tok_mask = index.padded_codes()
@@ -390,8 +608,9 @@ def maxsim_packed_rerank_store(index: PLAIDIndex, q, q_mask, cand,
     codec = index.codec
     ids, words, tmask = index.padded_packed()
     q = jnp.asarray(q, jnp.float32)
-    cand = np.asarray(cand, np.int64)
-    cand_mask = np.asarray(cand_mask)
+    if not isinstance(cand, jax.Array):
+        cand = np.asarray(cand, np.int64)
+        cand_mask = np.asarray(cand_mask)
     parts = []
     for lo in range(0, cand.shape[1], slab):
         c = jnp.asarray(cand[:, lo:lo + slab])
@@ -412,15 +631,17 @@ def maxsim_packed_rerank_store(index: PLAIDIndex, q, q_mask, cand,
 
 def plaid_search_batch(index: PLAIDIndex, qs: np.ndarray, k: int = 10,
                        nprobe: int = 8, t_cs: float = 0.3,
-                       ndocs: int = 8192
+                       ndocs: int = 8192, probe_kernel: str = "auto"
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """True batch API: qs [Nq, Lq, dim] -> (scores [Nq, k], ids [Nq, k];
     -inf/-1 pads). One traced rerank for the whole batch."""
     qs = np.asarray(qs, np.float32)
     Nq = len(qs)
     cand, cmask = plaid_candidates(index, qs, nprobe=nprobe, t_cs=t_cs,
-                                   ndocs=ndocs)
-    if not cmask.any():
+                                   ndocs=ndocs, probe_kernel=probe_kernel)
+    # the empty-batch early exit is a host decision; keep device
+    # candidates on device (rerank's -inf epilogue handles all-invalid)
+    if not isinstance(cmask, jax.Array) and not cmask.any():
         return (np.full((Nq, k), -np.inf, np.float32),
                 np.full((Nq, k), -1, np.int64))
     qm = jnp.ones(qs.shape[:2], bool)
@@ -430,9 +651,11 @@ def plaid_search_batch(index: PLAIDIndex, qs: np.ndarray, k: int = 10,
 
 def plaid_search(index: PLAIDIndex, q: np.ndarray, k: int = 10,
                  nprobe: int = 8, t_cs: float = 0.3,
-                 ndocs: int = 8192) -> Tuple[np.ndarray, np.ndarray]:
+                 ndocs: int = 8192, probe_kernel: str = "auto"
+                 ) -> Tuple[np.ndarray, np.ndarray]:
     """One query: q [Lq, dim] -> (scores [<=k], doc ids [<=k]) best-first."""
     S, I = plaid_search_batch(index, np.asarray(q, np.float32)[None], k=k,
-                              nprobe=nprobe, t_cs=t_cs, ndocs=ndocs)
+                              nprobe=nprobe, t_cs=t_cs, ndocs=ndocs,
+                              probe_kernel=probe_kernel)
     valid = I[0] >= 0
     return S[0][valid], I[0][valid]

@@ -298,6 +298,21 @@ class ReplicatedIndex:
                 ix.delete(doc_ids)
         self._invalidate()
 
+    def set_probe_kernel(self, probe_kernel: str) -> None:
+        """Fan the runtime-only plaid candidate-path toggle to every
+        distinct inner (monolithic or sharded)."""
+        seen = set()
+        for ix in self._inners:
+            if id(ix) in seen:
+                continue
+            seen.add(id(ix))
+            if isinstance(ix, ShardedIndex):
+                ix.set_probe_kernel(probe_kernel)
+            else:
+                from repro.core.plaid import PROBE_KERNELS
+                assert probe_kernel in PROBE_KERNELS, probe_kernel
+                ix.probe_kernel = probe_kernel
+
     # ----------------------------------------------------------------- plans
     def _plan_for(self, r: int) -> Optional[_FlatPlan]:
         if self.backend != "flat" or self.use_shard_map is False:

@@ -214,6 +214,17 @@ class ShardedIndex:
         self.probe_threads_cfg = int(probe_threads)
         old.shutdown(wait=False)
 
+    def set_probe_kernel(self, probe_kernel: str) -> None:
+        """Fan the RUNTIME-ONLY plaid candidate-path toggle to every
+        shard (same non-persisted contract as ``packed_rerank``). Each
+        shard's ``device_probe_plan`` still decides independently — a
+        shard whose geometry fails the bitwise-safety proof keeps the
+        host path."""
+        from repro.core.plaid import PROBE_KERNELS
+        assert probe_kernel in PROBE_KERNELS, probe_kernel
+        for shard in self.shards:
+            shard.probe_kernel = probe_kernel
+
     # ----------------------------------------------------------------- build
     def _new_shard(self) -> MultiVectorIndex:
         shard = MultiVectorIndex(dim=self.dim, backend=self.backend,

@@ -1,0 +1,89 @@
+"""Fused PLAID centroid-interaction Pallas TPU kernel (stages 1 + 3).
+
+Candidate generation's matmul-shaped stages in one pass: each program
+scores ONE query's tokens against the whole centroid table
+(``q @ centroids^T`` on the MXU) and immediately runs the threshold-
+pruned centroid-only MaxSim over one VMEM tile of its candidate code
+rows — the approximate scores PLAID prunes with, straight from packed
+centroid ids, without ever materializing the host path's
+``[Nq, block, L, Lq]`` gathered-score intermediate in HBM.
+
+The per-token centroid-score lookup is a one-hot MXU matmul, the same
+gather-free idiom as ``kernels/maxsim_packed``: codes -> [M, K] select
+plane -> [M, Lq] pruned scores. Every row of the select plane has
+exactly one 1.0 (ids live in [0, K)), so the contraction reproduces the
+reference's ``csT[code]`` gather bit for bit. The [K, dim] centroid
+table stays VMEM-resident across the whole grid; per-candidate HBM
+traffic drops to the code bytes (4B/token + mask) — see
+``repro.roofline.probe``.
+
+Grid/tiling mirrors the packed rerank kernel: one program per
+(query, candidate tile); VMEM high-water at the defaults (block_c=8,
+L=256, K=256, Lq=32, dim=128) is ~2.5 MiB — far under ~16 MiB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plaid_probe_kernel(q_ref, qm_ref, c_ref, code_ref, cm_ref, vm_ref,
+                        o_ref, *, t_cs: float):
+    """One query x one tile of its own candidates, scored centroid-only."""
+    _, Lq, dim = q_ref.shape
+    _, BC, L = code_ref.shape
+    K = c_ref.shape[0]
+    # stage 1: all centroid interactions for this query's tokens
+    q = q_ref[0].astype(jnp.float32)                       # [Lq, dim]
+    cs = jax.lax.dot_general(q, c_ref[...].astype(jnp.float32),
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Lq, K]
+    qm = qm_ref[0].reshape(Lq, 1)
+    cs = jnp.where(qm, cs, -jnp.inf)       # masked tokens contribute 0
+    csp = jnp.where(cs >= t_cs, cs, 0.0)   # t_cs prune (-inf < t_cs)
+    # stage 3: per-token centroid-score lookup as a one-hot MXU matmul
+    M = BC * L
+    codes = code_ref[0].reshape(M, 1)
+    onehot = (codes == jax.lax.broadcasted_iota(jnp.int32, (M, K), 1)
+              ).astype(jnp.float32)
+    vals = jax.lax.dot_general(onehot, csp, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    vals = vals.reshape(BC, L, Lq)
+    vals = jnp.where(cm_ref[0][..., None], vals, 0.0)
+    score = vals.max(axis=1).sum(axis=-1)                  # [BC]
+    o_ref[0] = jnp.where(vm_ref[0], score, -jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_cs", "block_c", "interpret"))
+def plaid_probe_pallas(q, q_mask, centroids, codes, code_mask, cand_mask,
+                       *, t_cs: float, block_c: int = 8,
+                       interpret: bool = False):
+    """q [Nq, Lq, dim]; centroids [K, dim]; codes [Nq, C, L] int32
+    per-candidate centroid ids; code_mask [Nq, C, L]; cand_mask [Nq, C]
+    -> approx scores [Nq, C] f32 (-inf on invalid candidate slots).
+    C % block_c == 0 (wrapper pads)."""
+    Nq, Lq, dim = q.shape
+    _, C, L = codes.shape
+    K = centroids.shape[0]
+    assert C % block_c == 0, (C, block_c)
+    grid = (Nq, C // block_c)
+    kernel = functools.partial(_plaid_probe_kernel, t_cs=t_cs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lq, dim), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, Lq), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, dim), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, block_c, L), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, L), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Nq, C), jnp.float32),
+        interpret=interpret,
+    )(q, q_mask, centroids, codes, code_mask, cand_mask)

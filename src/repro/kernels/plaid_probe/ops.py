@@ -1,0 +1,40 @@
+"""Dispatcher for the fused centroid-interaction probe op.
+
+``impl``:
+  * ``"auto"``   — Pallas kernel on TPU, jnp reference elsewhere (the
+                   serving default: interpret-mode Pallas on CPU is
+                   correctness-only and would tank QPS).
+  * ``"kernel"`` — force the Pallas kernel (interpret off-TPU; parity
+                   tests and benches).
+  * ``"ref"``    — force the jnp reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.maxsim.ops import _on_tpu, _pad_to
+from repro.kernels.plaid_probe.kernel import plaid_probe_pallas
+from repro.kernels.plaid_probe.ref import plaid_probe_ref
+
+PROBE_IMPLS = ("auto", "kernel", "ref")
+
+
+def plaid_probe_scores(q, q_mask, centroids, codes, code_mask, cand_mask,
+                       *, t_cs: float, impl: str = "auto",
+                       block_c: int = 8):
+    """Approx (centroid-only, t_cs-pruned) MaxSim for gathered candidate
+    code rows: q [Nq, Lq, dim]; codes/code_mask [Nq, C, L]; cand_mask
+    [Nq, C] -> scores [Nq, C] f32 (-inf invalid)."""
+    assert impl in PROBE_IMPLS, impl
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return plaid_probe_ref(q, q_mask, centroids, codes, code_mask,
+                               cand_mask, t_cs=t_cs)
+    C = codes.shape[1]
+    codes = _pad_to(codes.astype(jnp.int32), 1, block_c)
+    code_mask = _pad_to(code_mask, 1, block_c)
+    cand_mask = _pad_to(cand_mask, 1, block_c)
+    out = plaid_probe_pallas(
+        jnp.asarray(q, jnp.float32), jnp.asarray(q_mask, bool),
+        jnp.asarray(centroids, jnp.float32), codes, code_mask, cand_mask,
+        t_cs=float(t_cs), block_c=block_c, interpret=not _on_tpu())
+    return out[:, :C]

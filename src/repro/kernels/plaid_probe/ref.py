@@ -1,0 +1,22 @@
+"""jnp reference for the fused probe kernel — the bitwise oracle.
+
+Delegates to the exact stage-1/stage-3 functions the host candidate
+path runs (``core.plaid._centroid_scores_batch`` +
+``_approx_scores_batch``), so "kernel == ref" IS "kernel == host path"
+for the approximate scores, with no second implementation to drift.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def plaid_probe_ref(q, q_mask, centroids, codes, code_mask, cand_mask,
+                    *, t_cs: float):
+    """Same contract as ``kernel.plaid_probe_pallas`` (no block padding
+    required): -> approx scores [Nq, C] f32, -inf on invalid slots."""
+    from repro.core.plaid import (_approx_scores_batch,
+                                  _centroid_scores_batch)
+    cs = _centroid_scores_batch(jnp.asarray(q, jnp.float32),
+                                jnp.asarray(centroids))
+    cs = jnp.where(jnp.asarray(q_mask, bool)[:, :, None], cs, -jnp.inf)
+    return _approx_scores_batch(cs, codes, code_mask, cand_mask, t_cs)

@@ -205,23 +205,55 @@ def run_packed_rerank(args) -> int:
     return 0
 
 
+def run_plaid_probe(args) -> int:
+    """``--kernel plaid_probe``: roofline rows for the device-resident
+    candidate pipeline vs the host-gather (PCIe hop) baseline."""
+    from repro.roofline.probe import plaid_probe_report
+    shape = None
+    if args.probe_shape:
+        keys = ("nq", "lq", "k_centroids", "nprobe", "lmax", "c", "ld",
+                "dim")
+        vals = [int(v) for v in args.probe_shape.split(",")]
+        shape = dict(zip(keys, vals))
+    report = plaid_probe_report(shape)
+    print(HEADER, flush=True)
+    for row in report["rows"]:
+        print(row.pop("terms").row(), flush=True)
+    host, dev = report["rows"]
+    print(f"  host hop: {host['host_hop_bytes']} B "
+          f"({host['host_hop_s'] * 1e6:.1f} us PCIe) per batch; "
+          f"device fused total {dev['total_s'] * 1e6:.1f} us vs host "
+          f"{host['total_s'] * 1e6:.1f} us "
+          f"({dev['speedup_vs_host']:.2f}x)")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=1)
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--cell", default=None)
     ap.add_argument("--skip-multipod", action="store_true")
-    ap.add_argument("--kernel", default=None, choices=("packed_rerank",),
+    ap.add_argument("--kernel", default=None,
+                    choices=("packed_rerank", "plaid_probe"),
                     help="analyse a hand-written kernel instead of the "
                          "(arch x cell) dry-run grid")
     ap.add_argument("--bits", default="2,4",
                     help="packed_rerank: codec widths to price")
     ap.add_argument("--rerank-shape", default=None,
                     help="packed_rerank: nq,lq,s,ld,dim,k_centroids")
+    ap.add_argument("--probe-shape", default=None,
+                    help="plaid_probe: nq,lq,k_centroids,nprobe,lmax,"
+                         "c,ld,dim")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
     if args.kernel == "packed_rerank":
         return run_packed_rerank(args)
+    if args.kernel == "plaid_probe":
+        return run_plaid_probe(args)
 
     archs = [args.arch] if args.arch else ASSIGNED_ARCHS
     print(HEADER, flush=True)
