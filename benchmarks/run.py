@@ -13,12 +13,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "table4",
-                             "kernels"])
+                             "quality", "kernels"])
     args = ap.parse_args(argv)
 
-    from benchmarks import (kernel_bench, table1_unquantized,
-                            table2_quantized, table3_index_size,
-                            table4_second_model)
+    from benchmarks import (kernel_bench, quality_bench,
+                            table1_unquantized, table2_quantized,
+                            table3_index_size, table4_second_model)
     jobs = {
         "table1": ("Table 1: unquantized (16-bit HNSW)",
                    table1_unquantized.run),
@@ -28,6 +28,8 @@ def main(argv=None):
                    table3_index_size.run),
         "table4": ("Table 4: second model / language",
                    table4_second_model.run),
+        "quality": ("Quality sweep (pool_factor x method x backend)",
+                    quality_bench.run),
         "kernels": ("Kernel analysis", kernel_bench.run),
     }
     selected = [args.only] if args.only else list(jobs)

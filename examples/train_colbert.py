@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.corpus import DATASET_SPECS, SyntheticRetrievalCorpus
+from repro.eval import QualitySweep, synthetic_dataset
 from repro.models.colbert import colbert_loss, init_colbert
-from repro.retrieval.evaluate import evaluate_pooling
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import cosine_schedule, make_optimizer
 
@@ -86,12 +86,13 @@ def main(argv=None):
     ckpt.wait()
 
     print("\nevaluating token pooling with the trained encoder...")
-    eval_corpus = SyntheticRetrievalCorpus(
-        DATASET_SPECS["scifact"], vocab_size=cfg.trunk.vocab_size)
-    report = evaluate_pooling(params, cfg, eval_corpus, methods=("ward",),
-                              factors=(2, 3, 4), backend="plaid",
-                              metric_name="ndcg@10")
-    print(report.table())
+    dataset = synthetic_dataset("scifact", vocab_size=cfg.trunk.vocab_size,
+                                doc_maxlen=cfg.doc_maxlen - 2,
+                                query_maxlen=cfg.query_maxlen - 2)
+    report = QualitySweep(params, cfg, dataset, methods=("ward",),
+                          factors=(1, 2, 3, 4), backends=("plaid",),
+                          metrics=("ndcg@10",)).run(verbose=True)
+    print(report.markdown_table("ndcg@10", backend="plaid", quant_bits=2))
     return 0
 
 

@@ -43,7 +43,11 @@ _EXPORTS = {
     # persistence + evaluation + configs
     "load_artifact": "repro.core.persist",
     "IndexFormatError": "repro.core.persist",
-    "evaluate_pooling": "repro.retrieval.evaluate",
+    "evaluate_pooling": "repro.retrieval.evaluate",   # deprecated shim
+    "EvalDataset": "repro.eval.datasets",
+    "QualitySweep": "repro.eval.sweep",
+    "QualityReport": "repro.eval.report",
+    "load_beir": "repro.eval.datasets",
     "get_config": "repro.configs",
     "get_smoke_config": "repro.configs",
     "init_colbert": "repro.models.colbert",

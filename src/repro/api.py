@@ -47,10 +47,13 @@ from repro.retrieval.indexer import Indexer, IndexStats
 from repro.retrieval.searcher import Searcher
 
 
-def _as_token_array(docs) -> np.ndarray:
+def _as_token_array(docs):
     """Monolithic builds take one [N, L] token array; accept an
-    iterator of batches too (the streaming input shape)."""
-    if isinstance(docs, np.ndarray):
+    iterator of batches too (the streaming input shape) and pass an
+    :class:`EncodedDocs` cache (corpus encoded once, pooled many ways —
+    the quality sweep's input) straight through."""
+    from repro.retrieval.indexer import EncodedDocs
+    if isinstance(docs, (np.ndarray, EncodedDocs)):
         return docs
     return np.concatenate([np.asarray(b) for b in docs])
 
@@ -246,6 +249,21 @@ class Retriever:
     def rankings(self, query_tokens: np.ndarray, k: int = 10
                  ) -> List[List[int]]:
         return self.searcher.rankings(query_tokens, k=k)
+
+    def evaluate(self, dataset, metrics=("ndcg@10",), k: int = 10):
+        """Score this retriever against an evaluation dataset.
+
+        ``dataset`` is a :class:`repro.eval.datasets.EvalDataset`
+        (synthetic or BEIR-loaded); ``metrics`` are ``"<name>@<k>"``
+        strings (``ndcg``/``recall``/``success``/``mrr``). Runs ONE
+        batched search at depth ``max(k, metric ks)`` and feeds the
+        ``[Nq, k]`` ranked-id matrix straight into the batched device
+        metrics (``repro.eval.metrics``). Returns ``{name: value}``.
+        """
+        from repro.eval.metrics import compute_metrics, max_k
+        depth = max(int(k), max_k(metrics))
+        _, ids = self.search(dataset.query_tokens, k=depth)
+        return compute_metrics(ids, dataset.qrels, metrics)
 
     def warmup(self, batch_sizes: Union[int, Iterable[int]],
                k: int = 10) -> None:

@@ -1,0 +1,55 @@
+"""Quality-evaluation subsystem.
+
+BEIR-style datasets (:mod:`repro.eval.datasets`), batched
+device-friendly metrics (:mod:`repro.eval.metrics`), the grid sweep
+driving the public ``repro.Retriever`` facade
+(:mod:`repro.eval.sweep`), the JSON/markdown report artifact
+(:mod:`repro.eval.report`) and the paper-envelope regression gate
+(:mod:`repro.eval.gate`).
+"""
+from repro.eval.datasets import (EvalDataset, from_corpus, load_beir,
+                                 synthetic_dataset)
+from repro.eval.gate import (GateResult, PAPER_ENVELOPE, check_envelope,
+                             check_regression, run_gate)
+from repro.eval.metrics import (DEFAULT_METRICS, PaddedQrels,
+                                compute_metrics, first_hit_ranks,
+                                metric_fn, mrr_at_k, ndcg_at_k,
+                                parse_metric, ranked_gains,
+                                rankings_matrix, recall_at_k,
+                                success_at_k)
+from repro.eval.report import (BENCH_QUALITY_FILE, QualityBaseline,
+                               QualityCell, QualityReport,
+                               read_bench_section, write_bench_section)
+from repro.eval.sweep import (QualitySweep, relative_performance)
+
+__all__ = [
+    "BENCH_QUALITY_FILE",
+    "DEFAULT_METRICS",
+    "EvalDataset",
+    "GateResult",
+    "PAPER_ENVELOPE",
+    "PaddedQrels",
+    "QualityBaseline",
+    "QualityCell",
+    "QualityReport",
+    "QualitySweep",
+    "check_envelope",
+    "check_regression",
+    "compute_metrics",
+    "first_hit_ranks",
+    "from_corpus",
+    "load_beir",
+    "metric_fn",
+    "mrr_at_k",
+    "ndcg_at_k",
+    "parse_metric",
+    "ranked_gains",
+    "rankings_matrix",
+    "read_bench_section",
+    "recall_at_k",
+    "relative_performance",
+    "run_gate",
+    "success_at_k",
+    "synthetic_dataset",
+    "write_bench_section",
+]

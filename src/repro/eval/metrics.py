@@ -1,0 +1,272 @@
+"""Batched, jit-friendly ranking metrics over ``[Nq, k]`` ranked-id
+matrices — the shape ``search_batch`` hands back off the device.
+
+The seed's ``retrieval/metrics.py`` loops queries in Python and looks
+ranked ids up in per-query dicts; fine for 64 queries, hopeless next to
+a serving engine that answers thousands per second. This module keeps
+those pure-numpy formulas as THE reference (tests pin against them) and
+reimplements each metric as one vectorized program:
+
+  * qrels are packed once into a :class:`PaddedQrels` pair of
+    ``[Nq, R]`` id/gain matrices (pad id -1, pad gain 0 — a pad can
+    match a ranked -1 pad but contributes zero gain, so padding is
+    harmless by construction);
+  * the per-(query, rank) relevance lookup is a jitted equality-matmul
+    (``ranked[:, :, None] == ids[:, None, :]`` contracted against the
+    gain matrix) — integer work, bitwise-equal to the dict lookups;
+  * the metric itself (nDCG@k / Recall@k / Success@k / MRR@k) is a
+    masked vectorized reduction over the resulting gain matrix.
+
+Every metric returns the mean over *scored* queries only, matching the
+reference's skip conventions exactly: nDCG/Success/MRR skip queries
+with an EMPTY qrel dict (a judged-all-irrelevant query still scores 0),
+Recall skips queries with no positive-gain entry.
+
+Metric names parse as ``"<metric>@<k>"`` (``metric_fn("ndcg@10")``), so
+a sweep config names its metrics as strings, the way the paper's tables
+do (NDCG@10 for BEIR, Success@5 for LoTTe, Recall@5 for the Japanese
+suite, plus MRR@10).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+METRIC_NAMES = ("ndcg", "recall", "success", "mrr")
+
+# the sweep's default metric set: the paper's three + MRR@10
+DEFAULT_METRICS = ("ndcg@10", "recall@5", "success@5", "mrr@10")
+
+
+# ---------------------------------------------------------------------------
+# Qrel packing
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PaddedQrels:
+    """Graded qrels as fixed-shape matrices the jitted metrics consume.
+
+    ``ids[i]`` holds query i's judged doc ids (pad -1), ``gains[i]``
+    the graded relevance of each (pad 0). ``judged[i]`` is True when
+    query i has ANY judgment — the reference metrics' skip mask.
+    """
+    ids: np.ndarray        # [Nq, R] int32, pad = -1
+    gains: np.ndarray      # [Nq, R] int32, pad = 0
+    judged: np.ndarray     # [Nq] bool — at least one qrel entry
+
+    @classmethod
+    def from_dicts(cls, qrels: Sequence[Dict[int, int]]) -> "PaddedQrels":
+        R = max((len(q) for q in qrels), default=0)
+        R = max(R, 1)                       # keep shapes non-degenerate
+        n = len(qrels)
+        ids = np.full((n, R), -1, np.int32)
+        gains = np.zeros((n, R), np.int32)
+        judged = np.zeros(n, bool)
+        for i, q in enumerate(qrels):
+            judged[i] = len(q) > 0
+            for j, (d, g) in enumerate(q.items()):
+                ids[i, j] = int(d)
+                gains[i, j] = int(g)
+        return cls(ids=ids, gains=gains, judged=judged)
+
+    @classmethod
+    def coerce(cls, qrels) -> "PaddedQrels":
+        if isinstance(qrels, cls):
+            return qrels
+        return cls.from_dicts(qrels)
+
+    @property
+    def n_queries(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def has_positive(self) -> np.ndarray:
+        """[Nq] bool — any positive-gain judgment (Recall's skip mask)."""
+        return (self.gains > 0).any(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Device kernels
+# ---------------------------------------------------------------------------
+@jax.jit
+def _gain_matrix(ranked, qids, qgains):
+    """[Nq, k] int32 gain of each ranked doc (0 when unjudged).
+
+    Pure integer work: equality match of ranked ids against each
+    query's judged ids, contracted with the gain matrix. A ranked pad
+    (-1) can only match a qrel pad (-1), whose gain is 0 — so pads
+    contribute nothing on either side. Bitwise-equal to the reference's
+    ``qrel.get(int(d), 0)`` loop.
+    """
+    match = ranked[:, :, None] == qids[:, None, :]
+    return jnp.sum(jnp.where(match, qgains[:, None, :], 0), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ndcg_device(ranked, qids, qgains, k: int):
+    """Per-query nDCG@k values [Nq] f32 (0 where IDCG == 0)."""
+    g = _gain_matrix(ranked[:, :k], qids, qgains).astype(jnp.float32)
+    kk = g.shape[1]
+    disc = 1.0 / jnp.log2(jnp.arange(2, kk + 2, dtype=jnp.float32))
+    dcg = jnp.sum((jnp.exp2(g) - 1.0) * disc[None, :], axis=1)
+    ideal = -jnp.sort(-qgains.astype(jnp.float32), axis=1)[:, :k]
+    ik = ideal.shape[1]
+    idisc = 1.0 / jnp.log2(jnp.arange(2, ik + 2, dtype=jnp.float32))
+    idcg = jnp.sum((jnp.exp2(ideal) - 1.0) * idisc[None, :], axis=1)
+    return jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-30), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _recall_device(ranked, qids, qgains, k: int):
+    """Per-query Recall@k [Nq] f32 (0 where no positive judgment)."""
+    g = _gain_matrix(ranked[:, :k], qids, qgains)
+    hits = jnp.sum((g > 0).astype(jnp.int32), axis=1)
+    n_rel = jnp.sum((qgains > 0).astype(jnp.int32), axis=1)
+    return jnp.where(n_rel > 0,
+                     hits.astype(jnp.float32)
+                     / jnp.maximum(n_rel, 1).astype(jnp.float32), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _success_device(ranked, qids, qgains, k: int):
+    """Per-query Success@k [Nq] f32 — 1.0 iff a positive doc ranks."""
+    g = _gain_matrix(ranked[:, :k], qids, qgains)
+    return jnp.any(g > 0, axis=1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _first_hit_rank(ranked, qids, qgains, k: int):
+    """[Nq] int32 — 1-based rank of the first positive-gain doc in the
+    top k, 0 when none ranks. The integer core of MRR (bitwise-pinned
+    in tests; the reciprocal is the only float step)."""
+    g = _gain_matrix(ranked[:, :k], qids, qgains)
+    kk = g.shape[1]
+    pos = jnp.arange(1, kk + 1, dtype=jnp.int32)
+    ranks = jnp.where(g > 0, pos[None, :], kk + 1)
+    first = jnp.min(ranks, axis=1)
+    return jnp.where(first > kk, 0, first)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _mrr_device(ranked, qids, qgains, k: int):
+    first = _first_hit_rank(ranked, qids, qgains, k)
+    return jnp.where(first > 0,
+                     1.0 / jnp.maximum(first, 1).astype(jnp.float32), 0.0)
+
+
+_DEVICE_FNS = {"ndcg": _ndcg_device, "recall": _recall_device,
+               "success": _success_device, "mrr": _mrr_device}
+
+
+# ---------------------------------------------------------------------------
+# Public surface
+# ---------------------------------------------------------------------------
+def ranked_gains(ranked_ids, qrels) -> np.ndarray:
+    """[Nq, k] int32 graded gain of every ranked doc — the device
+    relevance lookup on its own (tests pin it bitwise against the
+    reference's per-query dict walk)."""
+    q = PaddedQrels.coerce(qrels)
+    ranked = jnp.asarray(np.asarray(ranked_ids), jnp.int32)
+    return np.asarray(_gain_matrix(ranked, jnp.asarray(q.ids),
+                                   jnp.asarray(q.gains)))
+
+
+def first_hit_ranks(ranked_ids, qrels, k: int = 10) -> np.ndarray:
+    """[Nq] int32 1-based rank of each query's first relevant hit in
+    the top k (0 = miss) — MRR's integer core."""
+    q = PaddedQrels.coerce(qrels)
+    ranked = jnp.asarray(np.asarray(ranked_ids), jnp.int32)
+    return np.asarray(_first_hit_rank(ranked, jnp.asarray(q.ids),
+                                      jnp.asarray(q.gains), k))
+
+
+def per_query_values(name: str, ranked_ids, qrels,
+                     k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(values [Nq] f32, scored [Nq] bool) for one metric — the device
+    computation plus the reference's skip mask, before averaging."""
+    if name not in _DEVICE_FNS:
+        raise KeyError(f"unknown metric {name!r}; known: {METRIC_NAMES}")
+    q = PaddedQrels.coerce(qrels)
+    ranked = jnp.asarray(np.asarray(ranked_ids), jnp.int32)
+    vals = np.asarray(_DEVICE_FNS[name](ranked, jnp.asarray(q.ids),
+                                        jnp.asarray(q.gains), int(k)))
+    scored = q.has_positive if name == "recall" else q.judged
+    return vals, scored
+
+
+def _mean_scored(vals: np.ndarray, scored: np.ndarray) -> float:
+    if not scored.any():
+        return 0.0
+    return float(np.mean(vals[scored].astype(np.float64)))
+
+
+def ndcg_at_k(ranked_ids, qrels, k: int = 10) -> float:
+    """Mean nDCG@k (log2 discount, exponential gains) over judged
+    queries, from a [Nq, >=k] ranked-id matrix (-1 pads ignored)."""
+    return _mean_scored(*per_query_values("ndcg", ranked_ids, qrels, k))
+
+
+def recall_at_k(ranked_ids, qrels, k: int = 5) -> float:
+    """Mean fraction of each query's positive docs in the top k."""
+    return _mean_scored(*per_query_values("recall", ranked_ids, qrels, k))
+
+
+def success_at_k(ranked_ids, qrels, k: int = 5) -> float:
+    """Fraction of judged queries with >= 1 positive doc in the top k."""
+    return _mean_scored(*per_query_values("success", ranked_ids, qrels, k))
+
+
+def mrr_at_k(ranked_ids, qrels, k: int = 10) -> float:
+    """Mean reciprocal rank of the first positive doc in the top k."""
+    return _mean_scored(*per_query_values("mrr", ranked_ids, qrels, k))
+
+
+def parse_metric(name: str) -> Tuple[str, int]:
+    """``"ndcg@10"`` -> ``("ndcg", 10)`` with validation."""
+    try:
+        base, k = name.split("@")
+        k = int(k)
+    except ValueError:
+        raise ValueError(f"metric name must look like 'ndcg@10', "
+                         f"got {name!r}")
+    if base not in METRIC_NAMES or k < 1:
+        raise ValueError(f"unknown metric {name!r}; known bases: "
+                         f"{METRIC_NAMES}")
+    return base, k
+
+
+def metric_fn(name: str):
+    """Resolve ``"<metric>@<k>"`` to ``fn(ranked_ids, qrels) -> float``."""
+    base, k = parse_metric(name)
+    def run(ranked_ids, qrels, _base=base, _k=k):
+        return _mean_scored(
+            *per_query_values(_base, ranked_ids, qrels, _k))
+    run.__name__ = name.replace("@", "_at_")
+    return run
+
+
+def compute_metrics(ranked_ids, qrels,
+                    names: Sequence[str]) -> Dict[str, float]:
+    """All requested metrics from ONE ranked-id matrix; the qrels are
+    packed once and the [Nq, k] matrix is reused across metrics."""
+    q = PaddedQrels.coerce(qrels)
+    return {name: metric_fn(name)(ranked_ids, q) for name in names}
+
+
+def max_k(names: Sequence[str]) -> int:
+    """The ranked depth one search must return to score all ``names``."""
+    return max((parse_metric(n)[1] for n in names), default=10)
+
+
+def rankings_matrix(rankings: List[Sequence[int]], k: int) -> np.ndarray:
+    """Ragged per-query id lists -> the [Nq, k] -1-padded matrix the
+    batched metrics consume (the inverse of ``Searcher.rankings``)."""
+    out = np.full((len(rankings), k), -1, np.int64)
+    for i, row in enumerate(rankings):
+        row = list(row)[:k]
+        out[i, :len(row)] = row
+    return out

@@ -1,0 +1,191 @@
+"""``QualitySweep`` — the paper's evaluation protocol, grid-wise and
+without redundant work.
+
+The old ``retrieval/evaluate.evaluate_pooling`` re-encoded the corpus
+and rebuilt the factor-1 baseline for EVERY (method, factor) cell — an
+O(cells) multiplier on the most expensive step. The sweep:
+
+  1. encodes the corpus ONCE (``EncodedDocs`` caches the device
+     outputs with the Indexer's exact batch boundaries, so pooled
+     indexes are bitwise identical to the re-encode path);
+  2. builds the unpooled baseline ONCE per (backend, quant_bits) and
+     shares its ranking/metrics across every factor-1 cell and every
+     relative computation under that key;
+  3. drives ONLY the public ``repro.Retriever`` facade — every cell is
+     built and scored through the same entry points a user calls, so
+     the numbers gate what the API actually serves.
+
+Output is a :class:`~repro.eval.report.QualityReport` (JSON +
+paper-style markdown), which ``repro.eval.gate`` checks against the
+paper envelope and a pinned baseline file.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.eval.datasets import EvalDataset
+from repro.eval.metrics import DEFAULT_METRICS, compute_metrics, max_k
+from repro.eval.report import (QualityBaseline, QualityCell,
+                               QualityReport, baseline_key)
+
+QUANTIZED_BACKENDS = ("plaid",)     # quant_bits sweeps apply here only
+
+
+def relative_performance(metric: float, baseline: float) -> float:
+    """The paper's headline number: 100 = the unpooled baseline.
+
+    The ratio is formed FIRST so ``metric == baseline`` gives exactly
+    100.0 (x/x == 1.0 in IEEE for finite nonzero x) — the factor-1
+    invariant the tests pin bitwise.
+    """
+    return 100.0 * (metric / baseline) if baseline > 0 else 0.0
+
+
+class QualitySweep:
+    """Sweep pool_factor x pooling method x backend x quant_bits over
+    one dataset, scoring every cell through ``repro.Retriever``.
+
+    ``factors`` may include 1: factor-1 cells are the baseline by
+    construction (``PoolingSpec`` short-circuits factor<=1 to the
+    identity), so they REUSE the baseline's metrics/stats instead of
+    rebuilding — their relative value is exactly 100.0.
+    """
+
+    def __init__(self, params, cfg, dataset: EvalDataset,
+                 methods: Sequence[str] = ("ward", "sequential"),
+                 factors: Sequence[int] = (1, 2, 3, 4),
+                 backends: Sequence[str] = ("flat", "plaid"),
+                 quant_bits: Sequence[int] = (2,),
+                 metrics: Sequence[str] = DEFAULT_METRICS,
+                 k: int = 10,
+                 encode_batch: int = 64,
+                 index_overrides: Optional[Dict] = None):
+        self.params = params
+        self.cfg = cfg
+        self.dataset = dataset
+        self.methods = tuple(methods)
+        self.factors = tuple(int(f) for f in factors)
+        self.backends = tuple(backends)
+        self.quant_bits = tuple(int(b) for b in quant_bits)
+        self.metrics = tuple(metrics)
+        self.k = int(k)
+        self.encode_batch = int(encode_batch)
+        self.index_overrides = dict(index_overrides or {})
+        if not self.methods or not self.factors or not self.backends:
+            raise ValueError("methods, factors and backends must each "
+                             "be non-empty")
+
+    # ------------------------------------------------------------------
+    def _index_spec(self, backend: str, quant_bits: Optional[int]):
+        from repro.core.spec import IndexSpec
+        over = dict(self.index_overrides)
+        if quant_bits is not None:
+            over["quant_bits"] = int(quant_bits)
+        return IndexSpec.from_config(self.cfg, backend=backend, **over)
+
+    def _build(self, docs, backend: str, quant_bits: Optional[int],
+               method: str, factor: int):
+        import repro
+        from repro.core.spec import PoolingSpec, RetrieverSpec
+        spec = RetrieverSpec(
+            pooling=PoolingSpec(method=method if factor > 1 else "none",
+                                factor=max(int(factor), 1)),
+            index=self._index_spec(backend, quant_bits))
+        return repro.Retriever.build(self.params, self.cfg, docs, spec,
+                                     encode_batch=self.encode_batch)
+
+    def _evaluate(self, retriever) -> Dict[str, float]:
+        return retriever.evaluate(self.dataset, metrics=self.metrics,
+                                  k=self.k)
+
+    # ------------------------------------------------------------------
+    def run(self, verbose: bool = False,
+            encoded=None) -> QualityReport:
+        """Execute the grid. ``encoded`` lets callers share one
+        ``EncodedDocs`` cache across several sweeps of the same corpus
+        (the table benchmarks sweep one dataset per backend)."""
+        from repro.retrieval.indexer import EncodedDocs
+        t0 = time.time()
+        if encoded is None:
+            encoded = EncodedDocs.encode(self.params, self.cfg,
+                                         self.dataset.doc_tokens,
+                                         self.encode_batch)
+        report = QualityReport(
+            dataset=self.dataset.name,
+            n_docs=self.dataset.n_docs,
+            n_queries=self.dataset.n_queries,
+            k=max(self.k, max_k(self.metrics)),
+            meta={
+                "methods": list(self.methods),
+                "factors": list(self.factors),
+                "backends": list(self.backends),
+                "quant_bits": list(self.quant_bits),
+                "metrics": list(self.metrics),
+                "encode_batch": self.encode_batch,
+                "index_overrides": dict(self.index_overrides),
+                "dataset_meta": {k: v
+                                 for k, v in self.dataset.meta.items()
+                                 if isinstance(v, (str, int, float,
+                                                   bool))},
+            })
+
+        for backend in self.backends:
+            bits_grid: Tuple[Optional[int], ...] = (
+                self.quant_bits if backend in QUANTIZED_BACKENDS
+                else (None,))
+            for qb in bits_grid:
+                key = baseline_key(backend, qb)
+                base_r = self._build(encoded, backend, qb, "none", 1)
+                base_metrics = self._evaluate(base_r)
+                base_stats = base_r.stats
+                report.baselines[key] = QualityBaseline(
+                    backend=backend, quant_bits=qb,
+                    metrics=dict(base_metrics),
+                    n_vectors=base_stats.n_vectors_stored,
+                    index_bytes=base_stats.index_bytes)
+                if verbose:
+                    print(f"[{self.dataset.name}] baseline {key}: "
+                          + " ".join(f"{m}={v:.4f}"
+                                     for m, v in base_metrics.items()))
+                for method in self.methods:
+                    for factor in self.factors:
+                        if factor <= 1:
+                            # factor 1 IS the baseline (identity pool):
+                            # share its ranking instead of rebuilding
+                            cell = QualityCell(
+                                backend=backend, method=method,
+                                factor=1, quant_bits=qb,
+                                metrics=dict(base_metrics),
+                                relative={
+                                    m: relative_performance(v, v)
+                                    for m, v in base_metrics.items()},
+                                n_vectors=base_stats.n_vectors_stored,
+                                vector_reduction=0.0,
+                                index_bytes=base_stats.index_bytes,
+                                shared_baseline=True)
+                        else:
+                            r = self._build(encoded, backend, qb,
+                                            method, factor)
+                            m = self._evaluate(r)
+                            stats = r.stats
+                            cell = QualityCell(
+                                backend=backend, method=method,
+                                factor=factor, quant_bits=qb,
+                                metrics=dict(m),
+                                relative={
+                                    n: relative_performance(
+                                        v, base_metrics[n])
+                                    for n, v in m.items()},
+                                n_vectors=stats.n_vectors_stored,
+                                vector_reduction=stats.vector_reduction,
+                                index_bytes=stats.index_bytes)
+                        report.cells.append(cell)
+                        if verbose:
+                            rel = cell.relative.get(self.metrics[0], 0.0)
+                            print(f"  {key} {method} f={cell.factor}: "
+                                  f"rel {rel:.2f} "
+                                  f"({cell.vector_reduction:.1%} fewer "
+                                  f"vectors)")
+        report.meta["wall_s"] = round(time.time() - t0, 3)
+        return report

@@ -1,23 +1,23 @@
-"""The paper's evaluation harness: relative performance vs unpooled.
+"""DEPRECATED shim over :mod:`repro.eval`.
 
-``evaluate_pooling`` builds one index per (method, factor) cell plus the
-factor-1 baseline, runs the same queries through all of them, and reports
-each cell's metric as ``100 * metric / baseline_metric`` — the number every
-table in the paper is made of.
+The evaluation harness moved to the ``repro.eval`` subsystem:
+:class:`repro.eval.QualitySweep` encodes the corpus once, shares the
+unpooled baseline across cells, and drives only the public
+``repro.Retriever`` facade. This module keeps the original
+``evaluate_pooling`` / ``EvalReport`` surface alive for existing
+callers by delegating to the sweep; new code should use
+``repro.eval`` directly.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
-
-import numpy as np
+from typing import List, Optional, Sequence
 
 from repro.configs.base import ColbertConfig
-from repro.core.spec import IndexSpec, PoolingSpec
+from repro.core.spec import IndexSpec
 from repro.data.corpus import SyntheticRetrievalCorpus
-from repro.retrieval.indexer import Indexer
-from repro.retrieval.metrics import METRICS
-from repro.retrieval.searcher import Searcher
+from repro.eval.sweep import relative_performance  # noqa: F401  (re-export)
 
 
 @dataclass
@@ -60,10 +60,6 @@ class EvalReport:
         return "\n".join(rows)
 
 
-def relative_performance(metric: float, baseline: float) -> float:
-    return 100.0 * metric / baseline if baseline > 0 else 0.0
-
-
 def evaluate_pooling(params, cfg: ColbertConfig,
                      corpus: SyntheticRetrievalCorpus,
                      methods: Sequence[str] = ("ward", "kmeans",
@@ -73,38 +69,55 @@ def evaluate_pooling(params, cfg: ColbertConfig,
                      metric_name: str = "ndcg@10",
                      k: int = 10, query_maxlen: Optional[int] = None,
                      **index_kw) -> EvalReport:
-    """Full paper-protocol evaluation on one dataset."""
-    metric_fn = METRICS[metric_name]
-    doc_tokens = corpus.doc_token_batch(cfg.doc_maxlen - 2)
-    q_tokens = corpus.query_token_batch(query_maxlen
-                                        or (cfg.query_maxlen - 2))
-    # loose **index_kw stays accepted here (harness convenience) but is
-    # folded into a typed IndexSpec before it reaches the Indexer
+    """Full paper-protocol evaluation on one dataset.
+
+    .. deprecated:: use :class:`repro.eval.QualitySweep` — same
+       protocol, but the corpus is encoded once and the baseline built
+       once instead of per cell.
+    """
+    warnings.warn(
+        "repro.retrieval.evaluate.evaluate_pooling is deprecated; use "
+        "repro.eval.QualitySweep (encodes the corpus once and shares "
+        "the unpooled baseline across cells)",
+        DeprecationWarning, stacklevel=2)
+    from repro.eval.datasets import from_corpus
+    from repro.eval.sweep import QualitySweep
+
+    dataset = from_corpus(corpus, doc_maxlen=cfg.doc_maxlen - 2,
+                          query_maxlen=query_maxlen
+                          or (cfg.query_maxlen - 2))
+    # fold loose **index_kw into a typed spec once, to resolve the
+    # backend's quantization default for the sweep's grid key
     spec = IndexSpec.from_config(cfg, backend=backend, **index_kw)
-
-    def run(method: str, factor: int):
-        idx, stats = Indexer(
-            params, cfg, index_spec=spec,
-            pooling_spec=PoolingSpec(method=method,
-                                     factor=max(int(factor), 1)),
-        ).build(doc_tokens)
-        searcher = Searcher(params, cfg, idx)
-        ranked = searcher.rankings(q_tokens, k=max(k, 10))
-        return metric_fn(ranked, corpus.qrels), stats
-
-    base_metric, base_stats = run("none", 1)
+    sweep = QualitySweep(params, cfg, dataset,
+                         methods=methods, factors=factors,
+                         backends=(backend,),
+                         quant_bits=(spec.quant_bits,),
+                         metrics=(metric_name,), k=k,
+                         index_overrides=index_kw)
+    qreport = sweep.run()
+    qb = spec.quant_bits if backend in _quantized_backends() else None
+    base = qreport.baseline(backend, qb)
     report = EvalReport(dataset=corpus.spec.name, backend=backend,
                         metric_name=metric_name,
-                        baseline_metric=base_metric,
-                        baseline_vectors=base_stats.n_vectors_stored,
-                        baseline_bytes=base_stats.index_bytes)
+                        baseline_metric=base.metrics[metric_name],
+                        baseline_vectors=base.n_vectors,
+                        baseline_bytes=base.index_bytes)
     for method in methods:
         for factor in factors:
-            m, stats = run(method, factor)
+            c = qreport.cell(backend, method, int(factor), qb)
+            if c is None:
+                continue
             report.cells.append(PoolingCell(
-                method=method, factor=factor, metric=m,
-                relative=relative_performance(m, base_metric),
-                n_vectors=stats.n_vectors_stored,
-                vector_reduction=stats.vector_reduction,
-                index_bytes=stats.index_bytes))
+                method=method, factor=int(factor),
+                metric=c.metrics[metric_name],
+                relative=c.relative[metric_name],
+                n_vectors=c.n_vectors,
+                vector_reduction=c.vector_reduction,
+                index_bytes=c.index_bytes))
     return report
+
+
+def _quantized_backends():
+    from repro.eval.sweep import QUANTIZED_BACKENDS
+    return QUANTIZED_BACKENDS

@@ -58,6 +58,51 @@ from repro.models.colbert import encode_docs
 _emit_count = jax.jit(lambda emit: jnp.sum(emit.astype(jnp.int32)))
 
 
+class EncodedDocs:
+    """A corpus encoded ONCE, reusable across many pooling configs.
+
+    Holds the per-encode-batch ``(vectors, emit_mask, n_real_docs)``
+    triples exactly as ``Indexer.encode_and_pool_counted`` would have
+    produced them in-line (same batch boundaries, same padding), so
+    pooling+indexing from an ``EncodedDocs`` is bitwise identical to
+    re-encoding the raw tokens — minus the encoder forward passes.
+
+    This is what lets the quality sweep (``repro.eval.sweep``) build a
+    pool_factor x method x backend grid with ONE encoder pass over the
+    corpus: pass an ``EncodedDocs`` anywhere ``Retriever.build`` or
+    ``Indexer.build`` takes a ``[N, L]`` token array. (Streaming builds
+    keep raw tokens — their point is never materializing the corpus.)
+    """
+
+    def __init__(self, batches, n_docs: int, encode_batch: int):
+        self.batches = batches      # [(v [B,N,d], emit [B,N], n_real)]
+        self.n_docs = int(n_docs)
+        self.encode_batch = int(encode_batch)
+
+    @classmethod
+    def encode(cls, params, cfg: ColbertConfig, doc_tokens: np.ndarray,
+               encode_batch: int = 64) -> "EncodedDocs":
+        """Run the document encoder over ``doc_tokens`` [N, L] with the
+        Indexer's exact batching (chunks of ``encode_batch``, last
+        chunk zero-padded to full width) and keep the device outputs."""
+        doc_tokens = np.asarray(doc_tokens)
+        N, B = doc_tokens.shape[0], int(encode_batch)
+        batches = []
+        for lo in range(0, N, B):
+            chunk = doc_tokens[lo:lo + B]
+            pad = B - chunk.shape[0]
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            v, emit = encode_docs(params, jnp.asarray(chunk), cfg)
+            batches.append((v, emit, B - pad))
+        return cls(batches, n_docs=N, encode_batch=B)
+
+    def nbytes(self) -> int:
+        """Device bytes held by the cached encodes (sweep budgeting)."""
+        return sum(int(v.size) * v.dtype.itemsize
+                   + int(emit.size) for v, emit, _ in self.batches)
+
+
 @dataclass
 class IndexStats:
     n_docs: int
@@ -143,17 +188,37 @@ class Indexer:
         construct identical indexes)."""
         return self.index_spec.params()
 
-    def encode_and_pool(self, doc_tokens: np.ndarray) -> List[np.ndarray]:
-        """doc_tokens [N, L] -> list of per-doc pooled vector arrays."""
+    def encode_and_pool(self, doc_tokens) -> List[np.ndarray]:
+        """doc_tokens [N, L] (or an :class:`EncodedDocs`) -> list of
+        per-doc pooled vector arrays."""
         return self.encode_and_pool_counted(doc_tokens)[0]
 
+    def _encoded_batches(self, doc_tokens):
+        """Yield (vectors [B,N,d], emit [B,N], n_real_docs) per encode
+        batch — from the encoder, or straight from an
+        :class:`EncodedDocs` cache (same boundaries, same padding, so
+        downstream pooling sees identical inputs either way)."""
+        if isinstance(doc_tokens, EncodedDocs):
+            yield from doc_tokens.batches
+            return
+        N, B = doc_tokens.shape[0], self.encode_batch
+        for lo in range(0, N, B):
+            chunk = doc_tokens[lo:lo + B]
+            pad = B - chunk.shape[0]
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            v, emit = encode_docs(self.params, jnp.asarray(chunk), self.cfg)
+            yield v, emit, B - pad
+
     def encode_and_pool_counted(
-            self, doc_tokens: np.ndarray
+            self, doc_tokens
     ) -> Tuple[List[np.ndarray], int]:
         """(pooled per-doc arrays, raw emitted-vector count) from ONE
         encode pass — the emit mask each batch already computes is the
         unpooled count, so no second ``prepare_doc_tokens`` sweep over
-        the corpus (the old ``_raw_vector_count``) is needed.
+        the corpus (the old ``_raw_vector_count``) is needed. An
+        :class:`EncodedDocs` input skips the encoder entirely and pools
+        the cached batches (bitwise-identical output).
 
         Runs a 1-deep software pipeline: batch i+1's encode+pool+compact
         is DISPATCHED before batch i's compacted rows are pulled to the
@@ -165,10 +230,6 @@ class Indexer:
         """
         out: List[np.ndarray] = []
         raw_parts = []      # device scalars; materialized once at the end
-        N = doc_tokens.shape[0]
-        if N == 0:
-            return out, 0
-        B = self.encode_batch
         pending = None      # (compaction ticket | docs list, n real docs)
 
         def fetch(prev):
@@ -177,17 +238,12 @@ class Indexer:
                     else compact_pooled_finish(ticket))
             out.extend(docs[:keep] if keep < len(docs) else docs)
 
-        for lo in range(0, N, B):
-            chunk = doc_tokens[lo:lo + B]
-            pad = B - chunk.shape[0]
-            if pad:
-                chunk = np.pad(chunk, ((0, pad), (0, 0)))
-            v, emit = encode_docs(self.params, jnp.asarray(chunk), self.cfg)
+        for v, emit, n_real in self._encoded_batches(doc_tokens):
             pooled, pmask = self.pooling.apply(v, emit)
-            if pad:
+            if n_real < emit.shape[0]:
                 # padding rows still emit their CLS/[D] markers — drop
                 # them from the raw count (and their docs below)
-                emit = emit[:B - pad]
+                emit = emit[:n_real]
             raw_parts.append(_emit_count(emit))
             if isinstance(pooled, jnp.ndarray):
                 ticket = compact_pooled_begin(pooled, pmask)
@@ -195,7 +251,9 @@ class Indexer:
                 ticket = compact_pooled(pooled, pmask)
             if pending is not None:
                 fetch(pending)
-            pending = (ticket, B - pad)
+            pending = (ticket, n_real)
+        if pending is None:
+            return out, 0
         fetch(pending)
         return out, int(np.sum([np.asarray(r) for r in raw_parts]))
 
@@ -276,6 +334,11 @@ class Indexer:
         from repro.core.sharded import ShardedIndex
 
         assert shard_max_vectors > 0, shard_max_vectors
+        if isinstance(token_batches, EncodedDocs):
+            raise TypeError(
+                "build_streaming takes raw token batches — the point of "
+                "the streaming path is never materializing the corpus; "
+                "EncodedDocs caches feed monolithic builds only")
         if isinstance(token_batches, np.ndarray):
             arr, B = token_batches, self.encode_batch
             token_batches = (arr[lo:lo + B]

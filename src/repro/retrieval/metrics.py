@@ -2,6 +2,11 @@
 
 The paper reports NDCG@10 (BEIR), Success@5 (LoTTe), Recall@5 (Japanese),
 always as RELATIVE performance vs the unpooled baseline (100 = baseline).
+
+These per-query Python loops are the REFERENCE implementations: the
+batched device metrics in ``repro.eval.metrics`` are pinned against
+them (bitwise on the integer gain/rank structures, allclose on the
+float means) and are what the quality sweep actually runs.
 """
 from __future__ import annotations
 
@@ -57,6 +62,23 @@ def recall_at_k(ranked: List[Sequence[int]], qrels: List[Dict[int, int]],
     return float(np.mean(vals)) if vals else 0.0
 
 
+def mrr_at_k(ranked: List[Sequence[int]], qrels: List[Dict[int, int]],
+             k: int = 10) -> float:
+    """Mean reciprocal rank of the first relevant doc in the top k."""
+    vals = []
+    for ids, qrel in zip(ranked, qrels):
+        if not qrel:
+            continue
+        rr = 0.0
+        for pos, d in enumerate(ids[:k], start=1):
+            if qrel.get(int(d), 0) > 0:
+                rr = 1.0 / pos
+                break
+        vals.append(rr)
+    return float(np.mean(vals)) if vals else 0.0
+
+
 METRICS = {"ndcg@10": lambda r, q: ndcg_at_k(r, q, 10),
            "success@5": lambda r, q: success_at_k(r, q, 5),
-           "recall@5": lambda r, q: recall_at_k(r, q, 5)}
+           "recall@5": lambda r, q: recall_at_k(r, q, 5),
+           "mrr@10": lambda r, q: mrr_at_k(r, q, 10)}

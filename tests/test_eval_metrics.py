@@ -1,0 +1,217 @@
+"""Pin the batched device metrics (repro.eval.metrics) against the
+pure-numpy reference (repro.retrieval.metrics).
+
+The integer structures — the [Nq, k] graded-gain matrix and MRR's
+first-hit ranks — are pinned BITWISE against a per-query dict walk;
+the float metric means get allclose (the device path sums f32 in a
+different order than the reference's f64 loop).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:  # hypothesis gates only the sweep tests, not the fixed fixtures
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+from repro.eval import metrics as M
+from repro.retrieval import metrics as R
+
+REFERENCE = {"ndcg": R.ndcg_at_k, "recall": R.recall_at_k,
+             "success": R.success_at_k, "mrr": R.mrr_at_k}
+
+
+def reference_gains(ranked, qrels):
+    """The dict walk the device gain matrix must reproduce bitwise."""
+    out = np.zeros(ranked.shape, np.int32)
+    for i, qrel in enumerate(qrels):
+        for j, d in enumerate(ranked[i]):
+            out[i, j] = qrel.get(int(d), 0) if int(d) >= 0 else 0
+    return out
+
+
+def reference_first_hits(ranked, qrels, k):
+    out = np.zeros(len(qrels), np.int32)
+    for i, qrel in enumerate(qrels):
+        for pos, d in enumerate(ranked[i][:k], start=1):
+            if qrel.get(int(d), 0) > 0:
+                out[i] = pos
+                break
+    return out
+
+
+def random_case(rng, n_queries, n_docs, k, graded=True):
+    ranked = np.stack([rng.permutation(n_docs)[:k]
+                       for _ in range(n_queries)]).astype(np.int64)
+    qrels = []
+    for _ in range(n_queries):
+        n = int(rng.integers(0, min(6, n_docs) + 1))
+        docs = rng.permutation(n_docs)[:n]
+        hi = 4 if graded else 2          # gains in [0, hi)
+        qrels.append({int(d): int(rng.integers(0, hi)) for d in docs})
+    return ranked, qrels
+
+
+def assert_matches_reference(ranked, qrels, k):
+    np.testing.assert_array_equal(
+        M.ranked_gains(ranked, qrels), reference_gains(ranked, qrels))
+    np.testing.assert_array_equal(
+        M.first_hit_ranks(ranked, qrels, k),
+        reference_first_hits(ranked, qrels, k))
+    as_lists = [list(map(int, row)) for row in ranked]
+    for base, ref in REFERENCE.items():
+        mine = M.metric_fn(f"{base}@{k}")(ranked, qrels)
+        theirs = ref(as_lists, qrels, k)
+        assert mine == pytest.approx(theirs, abs=1e-6), (base, k)
+
+
+# ---------------------------------------------------------------------------
+# seeded sweep (always runs)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_metrics_match_reference_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_docs = int(rng.integers(5, 60))
+    k = int(rng.integers(1, 15))
+    ranked, qrels = random_case(rng, int(rng.integers(1, 12)),
+                                n_docs, min(k, n_docs),
+                                graded=bool(seed % 2))
+    assert_matches_reference(ranked, qrels, k)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_queries=st.integers(1, 10),
+           n_docs=st.integers(2, 50),
+           k=st.integers(1, 12),
+           graded=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_metrics_match_reference_hypothesis(seed, n_queries, n_docs,
+                                                k, graded):
+        rng = np.random.default_rng(seed)
+        ranked, qrels = random_case(rng, n_queries, n_docs,
+                                    min(k, n_docs), graded)
+        assert_matches_reference(ranked, qrels, k)
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_metrics_match_reference_hypothesis():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+def test_empty_qrels_are_skipped_not_zeroed():
+    ranked = np.array([[0, 1, 2], [2, 1, 0]])
+    qrels = [{}, {2: 1}]
+    # query 0 is unjudged: it must not drag the mean down
+    assert M.ndcg_at_k(ranked, qrels, 3) == pytest.approx(1.0)
+    assert M.success_at_k(ranked, qrels, 3) == 1.0
+    assert M.mrr_at_k(ranked, qrels, 3) == 1.0
+    assert M.recall_at_k(ranked, qrels, 3) == 1.0
+    # all-empty qrels: every metric is 0.0, not NaN
+    for name in M.DEFAULT_METRICS:
+        assert M.metric_fn(name)(ranked, [{}, {}]) == 0.0
+
+
+def test_judged_but_all_irrelevant_counts_as_zero():
+    # gain-0 judgments: ndcg/success/mrr SCORE the query (0.0), recall
+    # skips it — the reference's exact convention
+    ranked = np.array([[0, 1], [0, 1]])
+    qrels = [{0: 0, 1: 0}, {0: 1}]
+    assert M.success_at_k(ranked, qrels, 2) == pytest.approx(0.5)
+    assert M.recall_at_k(ranked, qrels, 2) == pytest.approx(1.0)
+    assert M.ndcg_at_k(ranked, qrels, 2) == pytest.approx(0.5)
+
+
+def test_relevant_doc_outside_top_k():
+    ranked = np.array([[3, 4, 5, 6, 7, 8, 9, 10, 11, 0]])
+    qrels = [{0: 3}]
+    assert M.success_at_k(ranked, qrels, 5) == 0.0
+    assert M.recall_at_k(ranked, qrels, 5) == 0.0
+    assert M.mrr_at_k(ranked, qrels, 10) == pytest.approx(0.1)
+    assert M.first_hit_ranks(ranked, qrels, 5)[0] == 0
+    assert M.first_hit_ranks(ranked, qrels, 10)[0] == 10
+
+
+def test_k_larger_than_n_docs_with_pads():
+    # search_batch pads short result rows with -1: k > n_docs must not
+    # crash or let pads match anything
+    ranked = np.array([[1, 0, -1, -1, -1]])
+    qrels = [{0: 2, 1: 1}]
+    assert_matches_reference(ranked, qrels, 5)
+    assert M.recall_at_k(ranked, qrels, 5) == pytest.approx(1.0)
+    g = M.ranked_gains(ranked, qrels)
+    np.testing.assert_array_equal(g, [[1, 2, 0, 0, 0]])
+
+
+def test_graded_vs_binary_gains_change_ndcg_only_in_order():
+    # same doc set, graded qrels: ranking the grade-3 doc first beats
+    # ranking it second; binary qrels are order-insensitive at full
+    # recall depth
+    good = np.array([[7, 8]])
+    bad = np.array([[8, 7]])
+    graded = [{7: 3, 8: 1}]
+    assert M.ndcg_at_k(good, graded, 2) > M.ndcg_at_k(bad, graded, 2)
+    assert M.ndcg_at_k(good, graded, 2) == pytest.approx(1.0)
+    binary = [{7: 1, 8: 1}]
+    assert M.ndcg_at_k(good, binary, 2) == \
+        pytest.approx(M.ndcg_at_k(bad, binary, 2))
+    assert M.recall_at_k(good, graded, 2) == \
+        M.recall_at_k(bad, graded, 2) == 1.0
+
+
+def test_tied_scores_resolve_by_rank_position():
+    # two equally-graded docs: whichever the searcher ranked first
+    # takes the better discount, and MRR takes the earlier position
+    ranked = np.array([[5, 6, 1]])
+    qrels = [{5: 2, 6: 2}]
+    assert M.first_hit_ranks(ranked, qrels, 3)[0] == 1
+    assert M.ndcg_at_k(ranked, qrels, 3) == pytest.approx(1.0)
+
+
+def test_padded_qrels_packing():
+    q = M.PaddedQrels.from_dicts([{3: 2, 5: 1}, {}, {0: 0}])
+    assert q.ids.shape == (3, 2) and q.gains.shape == (3, 2)
+    np.testing.assert_array_equal(q.judged, [True, False, True])
+    np.testing.assert_array_equal(q.has_positive, [True, False, False])
+    assert q.ids[1].tolist() == [-1, -1]
+    assert q.gains[1].tolist() == [0, 0]
+    # degenerate: no judgments anywhere keeps a non-empty R axis
+    q0 = M.PaddedQrels.from_dicts([{}])
+    assert q0.ids.shape == (1, 1)
+
+
+def test_metric_name_parsing():
+    assert M.parse_metric("ndcg@10") == ("ndcg", 10)
+    assert M.parse_metric("success@5") == ("success", 5)
+    for bad in ("ndcg", "ndcg@0", "nope@10", "ndcg@x", "ndcg@10@2"):
+        with pytest.raises(ValueError):
+            M.parse_metric(bad)
+    assert M.max_k(("ndcg@10", "recall@5", "mrr@12")) == 12
+
+
+def test_compute_metrics_and_rankings_matrix():
+    ranked = M.rankings_matrix([[2, 0], [1]], k=4)
+    np.testing.assert_array_equal(
+        ranked, [[2, 0, -1, -1], [1, -1, -1, -1]])
+    out = M.compute_metrics(ranked, [{2: 1}, {0: 1}],
+                            ("ndcg@4", "success@4", "mrr@4"))
+    assert out["success@4"] == pytest.approx(0.5)
+    assert out["mrr@4"] == pytest.approx(0.5)
+
+
+def test_old_metric_registry_still_reference():
+    # the deprecated registry and the new name->fn resolver agree
+    ranked = [[0, 1, 2, 3, 4]]
+    qrels = [{1: 2, 4: 1}]
+    arr = np.array(ranked)
+    for name, ref in R.METRICS.items():
+        assert M.metric_fn(name)(arr, qrels) == \
+            pytest.approx(ref(ranked, qrels), abs=1e-6)

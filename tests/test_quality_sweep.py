@@ -1,0 +1,226 @@
+"""QualitySweep / report / gate behaviour, on the smoke encoder.
+
+The expensive pieces (encoder init, the sweep itself) are module-scoped
+fixtures; every test reads from the same report.
+"""
+from __future__ import annotations
+
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core.spec import IndexSpec, PoolingSpec, RetrieverSpec
+from repro.eval import (QualityReport, QualitySweep, check_envelope,
+                        check_regression, read_bench_section, run_gate,
+                        synthetic_dataset, write_bench_section)
+from repro.eval.sweep import relative_performance
+from repro.retrieval.indexer import EncodedDocs
+
+METRICS = ("ndcg@10", "recall@5")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = repro.get_smoke_config("colbertv2")
+    params = repro.init_colbert(jax.random.PRNGKey(0), cfg)
+    ds = synthetic_dataset("sweep-test", vocab_size=cfg.trunk.vocab_size,
+                           doc_maxlen=cfg.doc_maxlen - 2,
+                           query_maxlen=cfg.query_maxlen - 2,
+                           n_docs=48, n_queries=12, seed=3)
+    return params, cfg, ds
+
+
+@pytest.fixture(scope="module")
+def report(setup):
+    params, cfg, ds = setup
+    return QualitySweep(params, cfg, ds, methods=("ward", "sequential"),
+                        factors=(1, 2), backends=("flat", "plaid"),
+                        quant_bits=(2,), metrics=METRICS,
+                        encode_batch=16).run()
+
+
+def test_factor1_cell_is_baseline_exactly(report):
+    """Factor 1 is the identity pool: its cell must BE the baseline —
+    same absolute metrics, relative exactly 100.0, no rebuild."""
+    for backend, qb in (("flat", None), ("plaid", 2)):
+        base = report.baseline(backend, qb)
+        for method in ("ward", "sequential"):
+            c = report.cell(backend, method, 1, qb)
+            assert c is not None and c.shared_baseline
+            assert c.metrics == base.metrics
+            assert c.n_vectors == base.n_vectors
+            assert c.index_bytes == base.index_bytes
+            for v in c.relative.values():
+                assert v == 100.0          # bitwise, not approx
+
+
+def test_pooled_cells_reduce_vectors(report):
+    for backend, qb in (("flat", None), ("plaid", 2)):
+        base = report.baseline(backend, qb)
+        for method in ("ward", "sequential"):
+            c = report.cell(backend, method, 2, qb)
+            assert not c.shared_baseline
+            assert 0.3 < c.vector_reduction < 0.6
+            assert c.n_vectors < base.n_vectors
+            for name in METRICS:
+                assert c.relative[name] == pytest.approx(
+                    relative_performance(c.metrics[name],
+                                         base.metrics[name]))
+
+
+def test_sweep_is_deterministic(setup, report):
+    """Same params + dataset + grid => identical cells (what makes the
+    pinned-baseline regression gate meaningful)."""
+    params, cfg, ds = setup
+    rep2 = QualitySweep(params, cfg, ds,
+                        methods=("ward", "sequential"), factors=(1, 2),
+                        backends=("flat", "plaid"), quant_bits=(2,),
+                        metrics=METRICS, encode_batch=16).run()
+    assert len(rep2.cells) == len(report.cells)
+    for a, b in zip(report.cells, rep2.cells):
+        assert (a.backend, a.method, a.factor, a.quant_bits) == \
+            (b.backend, b.method, b.factor, b.quant_bits)
+        assert a.metrics == b.metrics
+        assert a.relative == b.relative
+        assert a.n_vectors == b.n_vectors
+
+
+def test_encoded_cache_matches_reencode_path(setup, report):
+    """The sweep encodes once (EncodedDocs); building the same cell
+    from raw tokens (re-encoding) must give identical rankings —
+    the old naive evaluate path, asserted bitwise on results."""
+    params, cfg, ds = setup
+    spec = RetrieverSpec(pooling=PoolingSpec(method="ward", factor=2),
+                         index=IndexSpec.from_config(cfg, backend="flat"))
+    naive = repro.Retriever.build(params, cfg, ds.doc_tokens, spec,
+                                  encode_batch=16)
+    cached = repro.Retriever.build(
+        params, cfg,
+        EncodedDocs.encode(params, cfg, ds.doc_tokens, encode_batch=16),
+        spec, encode_batch=16)
+    s1, i1 = naive.search(ds.query_tokens, k=10)
+    s2, i2 = cached.search(ds.query_tokens, k=10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    m = naive.evaluate(ds, metrics=METRICS)
+    assert m == report.cell("flat", "ward", 2).metrics
+
+
+def test_encoded_docs_rejects_streaming():
+    from repro.retrieval.indexer import Indexer
+    cfg = repro.get_smoke_config("colbertv2")
+    params = repro.init_colbert(jax.random.PRNGKey(0), cfg)
+    enc = EncodedDocs.encode(
+        params, cfg, np.zeros((4, cfg.doc_maxlen - 2), np.int32),
+        encode_batch=4)
+    assert enc.n_docs == 4 and enc.nbytes() > 0
+    with pytest.raises(TypeError):
+        Indexer(params, cfg).build_streaming(enc)
+
+
+def test_report_round_trips_json_and_table(report, tmp_path):
+    path = str(tmp_path / "BENCH_quality.json")
+    write_bench_section(path, "quality_sweep", report)
+    write_bench_section(path, "other", {"keep": 1})
+    back = read_bench_section(path, "quality_sweep")
+    assert isinstance(back, QualityReport)
+    assert back.to_json() == report.to_json()
+    assert back.cell("flat", "ward", 1).relative["ndcg@10"] == 100.0
+    # merge-update preserved the sibling section
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc["other"] == {"keep": 1}
+    # paper-style grid renders every swept cell
+    table = back.markdown_table("ndcg@10", backend="flat")
+    assert "| ward " in table and "f=2" in table and "100.00" in table
+
+
+def test_gate_passes_then_trips_on_injected_degradation(report, tmp_path):
+    path = str(tmp_path / "pin.json")
+    write_bench_section(path, "quality_sweep", report)
+    ok = run_gate(report, baseline_path=path)
+    assert ok and ok.checked > 0
+
+    # inject a degraded factor-2 cell: envelope AND regression trip
+    bad = QualityReport.from_json(report.to_json())
+    cell = bad.cell("flat", "ward", 2)
+    cell.relative["ndcg@10"] = 80.0
+    env = check_envelope(bad, min_relative=95.0)
+    assert not env.ok and any("envelope" in f for f in env.failures)
+    reg = check_regression(bad, report, tolerance=3.0)
+    assert not reg.ok and any("regression" in f for f in reg.failures)
+    both = run_gate(bad, baseline_path=path)
+    assert not both.ok and len(both.failures) >= 2
+    # a drop inside the tolerance is NOT a regression
+    cell.relative["ndcg@10"] = \
+        report.cell("flat", "ward", 2).relative["ndcg@10"] - 1.0
+    assert check_regression(bad, report, tolerance=3.0).ok
+
+
+def test_gate_empty_overlap_fails_loudly(report):
+    other = QualityReport(dataset="x", n_docs=1, n_queries=1, k=10)
+    assert not check_regression(other, report).ok
+    assert not check_envelope(other).ok
+
+
+def test_deprecated_shim_matches_sweep(setup, report):
+    params, cfg, ds = setup
+    from repro.data.corpus import DatasetSpec, SyntheticRetrievalCorpus
+    corpus = SyntheticRetrievalCorpus(
+        DatasetSpec(name="sweep-test", seed=3, n_docs=48, n_queries=12),
+        vocab_size=cfg.trunk.vocab_size)
+    with pytest.deprecated_call():
+        rep = repro.evaluate_pooling(
+            params, cfg, corpus, methods=("ward",), factors=(2,),
+            backend="flat", metric_name="ndcg@10")
+    assert rep.baseline_metric == pytest.approx(
+        report.baseline("flat").metrics["ndcg@10"])
+    c = rep.cell("ward", 2)
+    assert c.relative == pytest.approx(
+        report.cell("flat", "ward", 2).relative["ndcg@10"])
+
+
+def test_load_beir_directory_layout(tmp_path):
+    from repro.eval import load_beir
+    (tmp_path / "qrels").mkdir()
+    with open(tmp_path / "corpus.jsonl", "w") as fh:
+        for i in range(5):
+            fh.write(json.dumps({"_id": f"d{i}", "title": f"title {i}",
+                                 "text": f"document body {i} alpha"})
+                     + "\n")
+    with open(tmp_path / "queries.jsonl", "w") as fh:
+        fh.write(json.dumps({"_id": "q1", "text": "alpha one"}) + "\n")
+        fh.write(json.dumps({"_id": "q2", "text": "beta two"}) + "\n")
+        fh.write(json.dumps({"_id": "q3", "text": "unjudged"}) + "\n")
+    with open(tmp_path / "qrels" / "test.tsv", "w") as fh:
+        fh.write("query-id\tcorpus-id\tscore\n")      # header row
+        fh.write("q1\td0\t2\nq1\td3\t1\nq2\td4\t1\n")
+    ds = load_beir(str(tmp_path), doc_maxlen=16, query_maxlen=8)
+    assert ds.n_docs == 5 and ds.n_queries == 2     # q3 dropped
+    assert ds.qrels[0] == {0: 2, 3: 1} and ds.qrels[1] == {4: 1}
+    assert ds.doc_tokens.shape == (5, 16)
+    assert ds.query_tokens.shape == (2, 8)
+    assert ds.meta["provider"] == "beir"
+    # deterministic hash tokenization: same text -> same ids
+    ds2 = load_beir(str(tmp_path), doc_maxlen=16, query_maxlen=8)
+    np.testing.assert_array_equal(ds.doc_tokens, ds2.doc_tokens)
+    # max_docs truncation drops out-of-range qrels (and emptied queries)
+    ds3 = load_beir(str(tmp_path), doc_maxlen=16, query_maxlen=8,
+                    max_docs=4)
+    assert ds3.n_docs == 4 and ds3.n_queries == 1
+    assert ds3.qrels[0] == {0: 2, 3: 1}
+
+
+def test_retriever_evaluate_entry_point(setup):
+    params, cfg, ds = setup
+    spec = RetrieverSpec(pooling=PoolingSpec(method="none", factor=1),
+                         index=IndexSpec.from_config(cfg, backend="flat"))
+    r = repro.Retriever.build(params, cfg, ds.doc_tokens, spec,
+                              encode_batch=16)
+    out = r.evaluate(ds, metrics=("ndcg@10", "mrr@10"), k=10)
+    assert set(out) == {"ndcg@10", "mrr@10"}
+    assert all(0.0 <= v <= 1.0 for v in out.values())

@@ -230,6 +230,7 @@ def test_public_api_surface_pinned():
         "load_artifact", "IndexFormatError",
         "evaluate_pooling", "get_config", "get_smoke_config",
         "init_colbert",
+        "EvalDataset", "QualitySweep", "QualityReport", "load_beir",
     ])
     for name in repro.__all__:
         assert getattr(repro, name) is not None, name
